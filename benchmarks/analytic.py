@@ -1,0 +1,137 @@
+"""Analytic FLOP/byte model — the napkin-math backbone of §Roofline/§Perf.
+
+Per (ModelConfig, ShapeConfig) it derives forward FLOPs per token from the
+architecture algebra (projection/attention/MoE-dispatch/recurrent-scan
+terms), training totals (fwd + 2x bwd + 1x remat recompute = 4x), parameter
+and activation HBM traffic, and the causal/window overcount factors that
+explain the HLO-vs-MODEL_FLOPS ratio measured by the dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+
+
+@dataclass
+class FlopReport:
+    fwd_per_token: float
+    attn_sdpa_per_token: float
+    total: float
+    hbm_bytes: float
+    notes: str = ""
+
+
+def _attended_len(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Average attended KV length per query token."""
+    S = shape.seq_len
+    if shape.kind == "decode":
+        return min(S, cfg.sliding_window or S)
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, (S + 1) / 2)
+    return (S + 1) / 2          # causal average
+
+
+def fwd_flops_per_token(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    terms = {}
+    if cfg.family != "ssm" and H:
+        terms["attn_proj"] = 2 * d * hd * (H + 2 * KV) + 2 * H * hd * d
+        terms["attn_sdpa"] = 4 * H * hd * _attended_len(cfg, shape)
+    if cfg.family == "ssm":
+        ssm = cfg.ssm
+        K = ssm.state_size
+        Hh = d // K
+        C = ssm.chunk_size
+        terms["rwkv_proj"] = 5 * 2 * d * d + 4 * d * ssm.decay_lora_rank
+        # chunked wkv: intra-chunk A (2CK) + AV (2CK) per head + state I/O
+        terms["rwkv_scan"] = Hh * (4 * C * K + 4 * K * K / 1)
+        terms["rwkv_cmix"] = 4 * d * f + 2 * d * d
+    elif cfg.family == "hybrid":
+        ssm = cfg.ssm
+        di = ssm.expand * d
+        N = ssm.state_size
+        P = 64
+        Hh = di // P
+        C = ssm.chunk_size
+        terms["mamba_proj"] = 2 * d * 2 * di + 2 * d * 2 * N \
+            + 2 * d * Hh + 2 * di * d
+        terms["mamba_scan"] = Hh * (2 * C * N + 2 * C * P + 4 * N * P)
+    if cfg.moe is not None:
+        m = cfg.moe
+        terms["router"] = 2 * d * m.num_experts
+        terms["moe_ffn"] = (m.top_k * m.capacity_factor
+                            * 6 * d * m.d_ff_expert)
+    elif cfg.family != "ssm":
+        terms["mlp"] = 6 * d * f
+    terms["lm_head"] = 2 * d * cfg.vocab_size
+    if cfg.enc_dec:
+        # decoder cross-attn + encoder amortized over decoder tokens
+        terms["cross_attn"] = 2 * d * hd * (H + 2 * KV) \
+            + 4 * H * hd * cfg.encoder_frames
+        enc_per_frame = (4 * d * d + 2 * d * hd * (H + 2 * KV)
+                         + 4 * H * hd * cfg.encoder_frames + 6 * d * f)
+        terms["encoder_amortized"] = (cfg.num_encoder_layers * enc_per_frame
+                                      * cfg.encoder_frames / shape.seq_len)
+    return terms
+
+
+def report(cfg: ModelConfig, shape: ShapeConfig,
+           mode: str | None = None) -> FlopReport:
+    mode = mode or shape.kind
+    terms = fwd_flops_per_token(cfg, shape)
+    L = cfg.num_layers
+    per_layer = sum(v for k, v in terms.items()
+                    if k not in ("lm_head", "encoder_amortized"))
+    per_token = L * per_layer + terms["lm_head"] \
+        + terms.get("encoder_amortized", 0.0)
+    sdpa = L * terms.get("attn_sdpa", 0.0)
+    tokens = shape.global_batch * (1 if mode == "decode" else shape.seq_len)
+    mult = 4.0 if mode == "train" else 1.0   # fwd + 2 bwd + remat fwd
+    total = mult * per_token * tokens
+
+    # HBM traffic: params once per step (bf16) + optimizer (train: f32
+    # m,v read+write + f32 grads) + activations (resid stream per layer)
+    n_params = cfg.num_params()
+    n_active = cfg.num_active_params()
+    if mode == "train":
+        hbm = n_params * BF16 + 3 * n_params * F32 * 2 \
+            + tokens * cfg.d_model * BF16 * L * 2
+    elif mode == "prefill":
+        hbm = n_params * BF16 + tokens * cfg.d_model * BF16 * L * 2
+    else:
+        kv_len = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        cache = (2 * L * shape.global_batch * kv_len
+                 * cfg.num_kv_heads * cfg.resolved_head_dim * BF16
+                 if cfg.family != "ssm" else
+                 L * shape.global_batch * cfg.d_model * cfg.ssm.state_size
+                 * F32)
+        hbm = n_active * BF16 + cache
+    return FlopReport(per_token, sdpa, total, hbm)
+
+
+def causal_overcount(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """HLO counts the full S x S block matmuls; useful causal work is
+    ~S/2 -> expect HLO_attn ~ 2x MODEL attn. Returns the factor the
+    dry-run ratio should show for attention-heavy configs."""
+    if cfg.family == "ssm" or shape.kind == "decode":
+        return 1.0
+    if cfg.sliding_window is not None:
+        S_eff = min(cfg.sliding_window, (shape.seq_len + 1) / 2)
+        span = cfg.sliding_window + 512      # windowed_attention block span
+        return span / max(S_eff, 1.0)
+    return 2.0
+
+
+if __name__ == "__main__":
+    from repro.configs import ARCH_IDS, get_config
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in INPUT_SHAPES.values():
+            r = report(cfg, s)
+            print(f"{a:25s} {s.name:12s} fwd/tok={r.fwd_per_token:.3e} "
+                  f"total={r.total:.3e} hbm={r.hbm_bytes:.3e}")

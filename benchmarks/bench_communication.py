@@ -1,0 +1,48 @@
+"""Paper Table 3: per-round-communication ratio of gradient transmission
+(dim d_l = d/q) vs ZOO-VFL function values, for every dataset D1..D8, plus
+measured payload bytes from the host executor."""
+from __future__ import annotations
+
+from repro.core.comms import paper_ratio, tg_round, zoo_vfl_round
+from repro.data.synthetic import PAPER_DATASETS
+
+Q = 8
+
+# the paper's Table 3 reference ratios (for side-by-side comparison)
+PAPER_TABLE3 = {"D1_UCICreditCard": 1.065, "D2_GiveMeSomeCredit": 1.078,
+                "D3_Rcv1": 5.794, "D4_a9a": 1.192, "D5_w8a": 1.192,
+                "D6_Epsilon": 1.824, "D7_MNIST": 1.672,
+                "D8_FashionMNIST": 1.672}
+
+# d_l as the paper reports it (local block dim; MNIST uses the 98-dim
+# per-party slice of the 784-dim input)
+PAPER_DL = {"D1_UCICreditCard": 12, "D2_GiveMeSomeCredit": 12,
+            "D3_Rcv1": 5904, "D4_a9a": 16, "D5_w8a": 37,
+            "D6_Epsilon": 250, "D7_MNIST": 98, "D8_FashionMNIST": 98}
+
+
+def run():
+    rows = []
+    for name, spec in PAPER_DATASETS.items():
+        d_l = PAPER_DL[name]
+        ours = paper_ratio(d_l, batch=1)
+        ref = PAPER_TABLE3[name]
+        bytes_tg = tg_round(d_l).total
+        bytes_zoo = zoo_vfl_round(batch=1).total
+        rows.append((f"table3_prco_{name}", 0.0,
+                     f"d_l={d_l};ratio={ours:.3f};paper={ref:.3f};"
+                     f"bytes_tg={bytes_tg};bytes_zoo={bytes_zoo}"))
+    # rank correlation with the paper's column
+    import numpy as np
+    ours_v = [paper_ratio(PAPER_DL[n], batch=1) for n in PAPER_TABLE3]
+    ref_v = list(PAPER_TABLE3.values())
+    rho = np.corrcoef(np.argsort(np.argsort(ours_v)),
+                      np.argsort(np.argsort(ref_v)))[0, 1]
+    rows.append(("table3_rank_correlation_vs_paper", 0.0,
+                 f"spearman={rho:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

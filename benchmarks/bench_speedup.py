@@ -1,0 +1,56 @@
+"""Paper Fig. 4: q-party speedup of AsyREVEL vs SynREVEL with the thread
+executor (sleep-modelled party compute so wall-clock parallelism is real;
+one party is a 40% straggler, as in the paper's setup)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import PaperLRConfig, VFLConfig
+from repro.core.async_host import HostAsyncTrainer
+from repro.core.vfl import PaperLRModel, pad_features
+from repro.data.synthetic import make_paper_dataset
+
+TOTAL_UPDATES = 240
+COST = 10e-3           # simulated per-update local compute (constant per
+#                        block update; paper Fig 4 counts block updates)
+
+
+def _run_q(q, X, y, d, algorithm):
+    model = PaperLRModel(PaperLRConfig(num_features=d, num_parties=q))
+    Xp = np.asarray(pad_features(jnp.asarray(X), d, q))
+    vfl = VFLConfig(num_parties=q, mu=1e-3, lr_party=5e-2,
+                    lr_server=5e-2 / q)
+    # straggler 40% slower than the fastest (paper Section 5.3)
+    tr = HostAsyncTrainer(model, vfl, Xp, y, batch_size=32,
+                          compute_cost_s=COST,
+                          straggler={0: 1.4} if q > 1 else None)
+    t0 = time.perf_counter()
+    if algorithm == "async":
+        tr.run_async(total_updates=TOTAL_UPDATES)
+    else:
+        tr.run_sync(rounds=TOTAL_UPDATES // q)
+    return time.perf_counter() - t0
+
+
+def run():
+    (X, y), spec = make_paper_dataset("D5_w8a", scale=0.02)
+    rows = []
+    for algorithm in ("async", "sync"):
+        # warm the per-(q, model-config) jit caches OUTSIDE the timing
+        for q in (1, 2, 4, 8):
+            _run_q(q, X, y, spec.d, algorithm)
+        t1 = _run_q(1, X, y, spec.d, algorithm)
+        for q in (2, 4, 8):
+            tq = _run_q(q, X, y, spec.d, algorithm)
+            speedup = t1 / tq
+            rows.append((f"fig4_speedup_{algorithm}_q{q}", tq * 1e6,
+                         f"speedup={speedup:.2f};ideal={q}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,112 @@
+"""§Roofline report: reads the dry-run JSON artifacts and emits, per
+(arch x shape x mesh):
+
+  compute_s / memory_s / collective_s (from the loop-corrected HLO
+  analysis), the dominant bottleneck, MODEL_FLOPS = 6*N_active*D and the
+  useful-compute ratio, plus the analytic napkin model for cross-checking.
+
+Also ranks the hillclimb candidates: worst roofline fraction, most
+collective-bound, most paper-representative (vfl_zoo mode).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import analytic
+from repro.configs import INPUT_SHAPES, get_config
+
+
+def load_records(out_dir: str = "results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def enrich(r: dict) -> dict:
+    cfg = get_config(r["arch"])
+    shape = INPUT_SHAPES[r["shape"]]
+    ana = analytic.report(cfg, shape,
+                          "train" if r["mode"] in ("train", "vfl_zoo")
+                          else r["mode"])
+    r["analytic_flops"] = ana.total
+    r["analytic_hbm"] = ana.hbm_bytes
+    r["expected_overcount"] = analytic.causal_overcount(cfg, shape)
+    terms = r["roofline"]
+    dom = max(terms, key=terms.get)
+    total = sum(terms.values())
+    r["bound_frac"] = terms[dom] / total if total else 0.0
+    # roofline fraction: how close compute is to being the bound
+    r["compute_frac"] = terms["compute_s"] / max(total, 1e-30)
+    return r
+
+
+def table(recs, multi_pod=False, mode_filter=("train", "prefill",
+                                              "decode")):
+    rows = []
+    for r in recs:
+        if r["multi_pod"] != multi_pod or r["mode"] not in mode_filter:
+            continue
+        rows.append(enrich(dict(r)))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def fmt_markdown(rows) -> str:
+    hdr = ("| arch | shape | mode | compute_s | memory_s | collective_s | "
+           "bottleneck | MODEL_TF | HLO_TF | useful | fits_hbm |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        temp = mem.get("temp_size_in_bytes", 0)
+        fits = "yes" if temp < 16e9 else f"NO({temp/1e9:.0f}GB)"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {r['bottleneck'][:-2]} "
+            f"| {r['model_flops']/1e12:.1f} "
+            f"| {r['hlo_flops_global']/1e12:.1f} "
+            f"| {r['useful_flops_ratio']:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def hillclimb_candidates(rows):
+    """The three §Perf picks."""
+    by_frac = min(rows, key=lambda r: r["compute_frac"])
+    by_coll = max(rows, key=lambda r: r["roofline"]["collective_s"])
+    return {"worst_roofline_fraction": (by_frac["arch"], by_frac["shape"]),
+            "most_collective_bound": (by_coll["arch"], by_coll["shape"]),
+            "paper_representative": ("qwen1.5-0.5b", "train_4k",
+                                     "vfl_zoo")}
+
+
+def main():
+    recs = load_records()
+    rows = table(recs, multi_pod=False)
+    print(fmt_markdown(rows))
+    print()
+    vfl_rows = table(recs, multi_pod=False, mode_filter=("vfl_zoo",))
+    print("## paper-mode (AsyREVEL vfl_zoo) baselines")
+    print(fmt_markdown(vfl_rows))
+    print()
+    mp = table(recs, multi_pod=True)
+    print(f"multi-pod pairs OK: {len(mp)}/40")
+    print("hillclimb picks:", json.dumps(hillclimb_candidates(rows)))
+    # CSV for run.py
+    for r in rows + vfl_rows:
+        t = r["roofline"]
+        print(f"CSV,roofline,{r['arch']},{r['shape']},{r['mode']},"
+              f"{t['compute_s']:.6f},{t['memory_s']:.6f},"
+              f"{t['collective_s']:.6f},{r['bottleneck']},"
+              f"{r['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

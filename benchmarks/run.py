@@ -1,0 +1,68 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig3 table4
+
+Prints ``name,us_per_call,derived`` CSV per row; the roofline section
+(driven by results/dryrun artifacts, see launch/dryrun.py) appends its own
+CSV block when artifacts exist.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SUITES = {
+    "fig3": ("benchmarks.bench_convergence", "Fig 3: black-box convergence"),
+    "table3": ("benchmarks.bench_communication", "Table 3: PRCO ratios"),
+    "table4": ("benchmarks.bench_losslessness", "Table 4: losslessness"),
+    "fig4": ("benchmarks.bench_speedup", "Fig 4: q-party speedup"),
+    "thm1": ("benchmarks.bench_privacy", "Theorem 1: attack defense"),
+    "thm2": ("benchmarks.bench_rate", "Theorem 2: O(1/sqrt(T)) rate"),
+    "kernels": ("benchmarks.bench_kernels", "Pallas kernel validation"),
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    failures = 0
+    for key in wanted:
+        mod_name, title = SUITES[key]
+        print(f"# === {key}: {title} ===", flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures += 1
+        print(f"# {key} done in {time.perf_counter() - t0:.1f}s",
+              flush=True)
+    # roofline block (only if dry-run artifacts exist)
+    try:
+        from benchmarks import roofline
+        recs = roofline.load_records()
+        if recs:
+            print("# === roofline (from dry-run artifacts) ===")
+            rows = roofline.table(recs, multi_pod=False)
+            rows += roofline.table(recs, multi_pod=False,
+                                   mode_filter=("vfl_zoo",))
+            for r in rows:
+                t = r["roofline"]
+                print(f"roofline_{r['arch']}_{r['shape']}_{r['mode']},0.0,"
+                      f"compute={t['compute_s']:.4f};"
+                      f"memory={t['memory_s']:.4f};"
+                      f"collective={t['collective_s']:.4f};"
+                      f"bottleneck={r['bottleneck']};"
+                      f"useful={r['useful_flops_ratio']:.2f}")
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+        failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Continuous-batching serving: 6 requests of different prompt/output
+lengths share 3 decode slots of one jit-compiled step; finished requests
+release their slot to the queue mid-flight (no padding, no pipeline
+flush). Works across architecture families — per-slot positions thread
+through RoPE, the KV write index, the attention mask and SSM states.
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=rng.integers(3, 12)
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 7)))
+            for i in range(6)]
+    serial_steps = sum(len(r.prompt) + r.max_new_tokens for r in reqs)
+
+    eng = ServingEngine(model, params, slots=3, max_len=64)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
+    print(f"{len(done)} requests in {eng.steps} batched steps "
+          f"(serial would take {serial_steps}) — {dt:.2f}s")
+    assert len(done) == 6 and eng.steps < serial_steps
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

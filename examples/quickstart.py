@@ -1,0 +1,46 @@
+"""Quickstart: the paper's algorithm end-to-end in ~1 minute on CPU.
+
+Eight parties hold disjoint vertical feature slices of a credit-scoring
+style dataset; the server holds labels. Models are BLACK BOXES: the only
+things that ever cross the party/server boundary are function values
+(c, c_hat up; h, h_bar down). AsyREVEL-Gau trains the joint nonconvex
+logistic-regression objective (paper Eq. 22) to ~90% accuracy.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import PaperLRConfig, VFLConfig
+from repro.core import asyrevel
+from repro.core.vfl import PaperLRModel, pad_features
+from repro.data.synthetic import make_paper_dataset
+
+
+def main():
+    q = 8
+    (X, y), spec = make_paper_dataset("D1_UCICreditCard", scale=0.05)
+    print(f"dataset: {spec.name}  n={len(y)}  d={spec.d}  parties={q}")
+
+    model = PaperLRModel(PaperLRConfig(num_features=spec.d, num_parties=q))
+    data = {"x": pad_features(jnp.asarray(X), spec.d, q),
+            "y": jnp.asarray(y)}
+
+    vfl = VFLConfig(num_parties=q, direction="gaussian", mu=1e-3,
+                    lr_party=5e-2, lr_server=5e-2 / q, max_delay=4)
+    state, losses = asyrevel.train(model, vfl, data, jax.random.key(0),
+                                   steps=4000, batch_size=64)
+    losses = np.asarray(losses)
+    for i in range(0, 4000, 500):
+        print(f"step {i:5d}  loss {losses[i:i+100].mean():.4f}")
+    pred = model.predict(state.w0, state.parties, data["x"])
+    acc = float(jnp.mean(pred == data["y"]))
+    print(f"final loss {losses[-100:].mean():.4f}   train acc {acc:.3f}")
+    assert acc > 0.8
+    print("OK — black-box federated training with only function values "
+          "exchanged.")
+
+
+if __name__ == "__main__":
+    main()

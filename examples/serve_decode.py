@@ -1,0 +1,61 @@
+"""Serving example: batched prefill + autoregressive decode across three
+architecture families (dense GQA, attention-free RWKV-6, hybrid
+attn+mamba) through the ONE Model API — the same `serve_step` the
+decode_32k / long_500k dry-runs lower for the production mesh.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import steps as step_lib
+from repro.models import build_model
+
+
+def serve(arch: str, batch=2, prompt=16, gen=8):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, prompt)),
+                          jnp.int32)
+    frames = None
+    if cfg.enc_dec:
+        frames = jnp.asarray(rng.normal(size=(
+            batch, cfg.encoder_frames, cfg.d_model)).astype(np.float32))
+    serve_step = jax.jit(step_lib.make_serve_step(model))
+    cache = model.init_cache(params, batch, prompt + gen, frames=frames)
+    t0 = time.perf_counter()
+    logits = None
+    for pos in range(prompt):
+        logits, cache = serve_step(params, cache, prompts[:, pos:pos + 1],
+                                   jnp.int32(pos))
+    toks = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for g in range(gen):
+        toks.append(np.asarray(tok)[:, 0])
+        logits, cache = serve_step(params, cache, tok, jnp.int32(prompt + g))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    dt = time.perf_counter() - t0
+    state_kind = ("KV cache" if cfg.family in ("dense", "moe", "vlm",
+                                               "audio")
+                  else "recurrent state" if cfg.family == "ssm"
+                  else "KV cache + SSM state")
+    print(f"{arch:15s} [{cfg.family:6s}] {state_kind:22s} "
+          f"{batch}x({prompt}+{gen}) tokens in {dt:.2f}s -> "
+          f"{np.stack(toks, 1)[0]}")
+
+
+def main():
+    for arch in ("qwen1.5-0.5b", "rwkv6-1.6b", "hymba-1.5b"):
+        serve(arch)
+    print("OK — one serve_step API across attention, attention-free and "
+          "hybrid families.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Checkpointing: pytree <-> npz with path-encoded keys, atomic writes,
+step-numbered directories and latest-step discovery. No external deps."""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype not in (np.float16, np.float32, np.float64) and \
+                jnp.issubdtype(arr.dtype, jnp.floating):
+            # bf16 etc. aren't npz-portable; widen losslessly to f32 and
+            # restore_checkpoint casts back to the reference dtype
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: dict | None
+                    = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, _ = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    if metadata is not None:
+        with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
+            json.dump(metadata, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", fn))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, tree_like, step: int | None = None):
+    """Restore into the STRUCTURE of `tree_like` (shape/dtype validated)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat_like, treedef = _flatten(tree_like)
+    # reference dtypes from the ORIGINAL leaves (bf16 etc.), not the
+    # npz-widened ones
+    ref_dtypes = [leaf.dtype for _, leaf in
+                  jax.tree_util.tree_flatten_with_path(tree_like)[0]]
+    leaves = []
+    for (key, ref), rdt in zip(flat_like.items(), ref_dtypes):
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if arr.shape != ref.shape:
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {ref.shape}")
+        leaves.append(jnp.asarray(arr).astype(rdt))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), leaves)
+    return tree, step

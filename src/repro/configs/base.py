@@ -1,0 +1,221 @@
+"""Config dataclasses for the repro framework.
+
+Every assigned architecture gets a ``ModelConfig`` (full, paper-exact sizes)
+plus a ``reduced()`` variant (<=2 layers, d_model<=512, <=4 experts) used by
+the CPU smoke tests. The FULL configs are only ever lowered via
+``launch/dryrun.py`` (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01  # load-balance auxiliary loss
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "rwkv6"          # 'rwkv6' | 'mamba2'
+    state_size: int = 16          # N for mamba-style; head_size for rwkv
+    expand: int = 2               # d_inner = expand * d_model (mamba)
+    chunk_size: int = 128         # chunked-scan block length
+    decay_lora_rank: int = 64     # rwkv6 data-dependent decay LoRA rank
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                # 0 for attention-free archs
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False         # chameleon-style stabilization
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    pos_emb: str = "rope"         # rope | sinusoidal | none
+    norm_eps: float = 1e-5
+    sliding_window: Optional[int] = None   # None = full attention
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # --- enc-dec (whisper) ---
+    enc_dec: bool = False
+    num_encoder_layers: int = 0
+    encoder_frames: int = 1500    # precomputed conv-frontend frames (STUB input)
+    # --- modality frontend stub ---
+    frontend: str = "none"        # none | audio_stub | vq_stub
+    # --- misc ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    chunked_ce: bool = False      # flash cross-entropy (never materialize
+    #                               logits; §Perf C2 / big-vocab training)
+    kv_cache_dtype: str = "model"  # "model" (= activation dtype) | "int8"
+    #                               (quantized serving cache, per-position/
+    #                               head scales — halves decode cache HBM)
+    citation: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads == 0:
+            return 0
+        return self.d_model // self.num_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this config serve 500k-token contexts?"""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window is not None)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: <=2 layers, d_model<=512, <=4 experts."""
+        d_model = min(self.d_model, 256)
+        n_heads = 0 if self.num_heads == 0 else min(self.num_heads, 4)
+        ratio = max(1, (self.num_heads or 1) // max(1, self.num_kv_heads or 1))
+        kv = 0 if n_heads == 0 else max(1, n_heads // min(ratio, n_heads))
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(self.moe, num_experts=4,
+                                      top_k=min(self.moe.top_k, 2),
+                                      d_ff_expert=128)
+        ssm = None
+        if self.ssm is not None:
+            ssm = dataclasses.replace(self.ssm, chunk_size=16,
+                                      decay_lora_rank=8)
+        return dataclasses.replace(
+            self, num_layers=2, d_model=d_model, num_heads=n_heads,
+            num_kv_heads=kv, head_dim=64 if n_heads else 0,
+            d_ff=min(self.d_ff, 512), vocab_size=min(self.vocab_size, 512),
+            moe=moe, ssm=ssm, num_encoder_layers=min(self.num_encoder_layers, 2),
+            encoder_frames=min(self.encoder_frames, 32),
+            sliding_window=(min(self.sliding_window, 64)
+                            if self.sliding_window else None),
+            dtype="float32", remat=False)
+
+    def num_params(self) -> int:
+        """Analytic parameter count (for 6ND model-FLOPs and mem napkin math)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        H, KV, L = self.num_heads, self.num_kv_heads, self.num_layers
+        p = self.vocab_size * d                      # embedding
+        if not self.tie_embeddings:
+            p += d * self.vocab_size                 # lm head
+        per_layer = 0
+        if self.family != "ssm" and H:
+            per_layer += d * H * hd + 2 * d * KV * hd + H * hd * d
+            if self.qkv_bias:
+                per_layer += (H + 2 * KV) * hd
+        if self.family == "ssm":
+            # rwkv6 time-mix: r,k,v,g,o projections + decay lora + mixes
+            per_layer += 5 * d * d + 2 * self.ssm.decay_lora_rank * d
+            per_layer += 3 * d * self.d_ff            # channel mix (k, v, r)
+        elif self.family == "hybrid":
+            di = self.ssm.expand * d
+            per_layer += 2 * d * di + di * d + di * self.ssm.state_size * 2
+        if self.moe is not None:
+            per_layer += d * self.moe.num_experts     # router
+            per_layer += self.moe.num_experts * 3 * d * self.moe.d_ff_expert
+        elif self.family != "ssm":
+            per_layer += 3 * d * self.d_ff            # swiglu
+        p += L * per_layer
+        if self.enc_dec:
+            enc_per = d * H * hd * 2 + 2 * d * KV * hd * 0  # rough: same attn
+            enc_per = 4 * d * d + 2 * d * self.d_ff
+            p += self.num_encoder_layers * enc_per
+            p += L * (4 * d * d)                      # cross attention
+        return int(p)
+
+    def num_active_params(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.moe is None:
+            return self.num_params()
+        total = self.num_params()
+        all_expert = (self.num_layers * self.moe.num_experts * 3
+                      * self.d_model * self.moe.d_ff_expert)
+        active_expert = (self.num_layers * self.moe.top_k * 3
+                         * self.d_model * self.moe.d_ff_expert)
+        return int(total - all_expert + active_expert)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class VFLConfig:
+    """The paper's framework knobs (Section 3)."""
+    num_parties: int = 8          # q
+    party_hidden: int = 128       # width of the party tower F_m
+    party_layers: int = 2         # depth of F_m (paper: 2-layer FCN)
+    direction: str = "gaussian"   # gaussian (AsyREVEL-Gau) | uniform (-Uni)
+    mu: float = 1e-3              # smoothing parameter mu_m
+    lr_party: float = 1e-3        # eta_m
+    lr_server: float = 1e-3 / 8   # eta_0 = eta / q (paper setting)
+    max_delay: int = 4            # tau (Assumption 4)
+    activation_probs: Optional[Tuple[float, ...]] = None  # p_m (Assumption 3)
+    seed_replay: bool = False     # MeZO-style u regeneration (beyond-paper)
+    num_directions: int = 1       # directions averaged per estimate
+    #                               (variance reduction, beyond-paper; the
+    #                               paper points to Liu et al. 2018)
+    lam: float = 1e-4             # regularizer weight lambda
+    perturb_server: bool = True   # also ZO-update w_0 (Eq. 17)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int = 8
+    seq_len: int = 128
+    steps: int = 100
+    lr: float = 3e-4
+    optimizer: str = "adam"       # adam | sgd | zo_sgd
+    schedule: str = "constant"    # constant | cosine | wsd
+    warmup_steps: int = 10
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    seed: int = 0
+    log_every: int = 10
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n

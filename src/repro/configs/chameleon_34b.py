@@ -1,0 +1,16 @@
+"""chameleon-34b — early-fusion VLM with VQ image tokens [arXiv:2405.09818].
+
+Early fusion means image patches are VQ-quantized into the SAME token space
+as text, so the backbone is a plain decoder; the VQ encoder is the STUB
+frontend (input_specs provides token ids with a modality mask). Chameleon
+uses qk-norm for training stability — kept here.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="vlm",
+    num_layers=48, d_model=8192, num_heads=64, num_kv_heads=8,
+    head_dim=128, d_ff=22016, vocab_size=65536,
+    qk_norm=True, frontend="vq_stub",
+    citation="arXiv:2405.09818",
+)

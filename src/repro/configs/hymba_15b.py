@@ -1,0 +1,17 @@
+"""hymba-1.5b — hybrid: parallel attention + mamba heads in every layer,
+ssm_state=16 [arXiv:2411.13676].
+
+TPU adaptation note (DESIGN.md §4): the mamba heads use Mamba-2-style
+scalar-per-head decay so the scan shares the chunked linear-attention
+formulation with rwkv6.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    head_dim=64, d_ff=5504, vocab_size=32001,
+    sliding_window=1024,   # hymba uses SWA for most attention layers
+    ssm=SSMConfig(kind="mamba2", state_size=16, expand=2, chunk_size=128),
+    citation="arXiv:2411.13676",
+)

@@ -1,0 +1,11 @@
+"""qwen3-moe-30b-a3b — 128 experts, top-8 [hf:Qwen/Qwen3-30B-A3B]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4,
+    head_dim=128, d_ff=768, vocab_size=151936,
+    qk_norm=True,
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=768),
+    citation="hf:Qwen/Qwen3-30B-A3B",
+)

@@ -1,0 +1,12 @@
+"""rwkv6-1.6b (Finch) — attention-free RNN with data-dependent decay
+[arXiv:2404.05892]. head_size=64 -> 32 heads at d_model=2048."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    num_layers=24, d_model=2048, num_heads=0, num_kv_heads=0,
+    d_ff=7168, vocab_size=65536,
+    ssm=SSMConfig(kind="rwkv6", state_size=64, chunk_size=128,
+                  decay_lora_rank=64),
+    citation="arXiv:2404.05892",
+)

@@ -1,0 +1,20 @@
+"""whisper-small — encoder-decoder audio model [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs()`` provides precomputed frame embeddings (B, frames, d_model);
+we implement the transformer encoder + autoregressive decoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="audio",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+    head_dim=64, d_ff=3072, vocab_size=51865,
+    enc_dec=True, num_encoder_layers=12, encoder_frames=1500,
+    frontend="audio_stub", pos_emb="sinusoidal",
+    # long_500k requires sub-quadratic decoding: the decoder gets a
+    # sliding-window self-attention variant (cross-attn is already bounded
+    # by the 1500-frame encoder output).
+    sliding_window=None,
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,217 @@
+"""AsyREVEL / SynREVEL — device-level trainers (Algorithm 1).
+
+This is the TPU/SPMD adaptation of the paper's MPI asynchrony (DESIGN.md §4):
+a single ``lax.scan`` carries
+
+  * the party params stacked over a leading q axis,
+  * a (tau+1)-slot ring buffer of PAST party params — at step t the
+    activated party m_t ~ Categorical(p) (Assumption 3) sees the OTHER
+    parties' outputs computed from params delayed by tau_j <= tau
+    (Assumption 4: w_bar = w^{t - tau_t}),
+  * the server params w_0.
+
+Each step performs exactly the paper's message pattern:
+  party m uploads (c_m, c_hat_m); the server computes h, h_bar, h_hat and
+  returns (h, h_bar); party m forms the two-point estimate and updates w_m;
+  the server forms Eq. (17) and updates w_0. Nothing but function values
+  crosses the party/server boundary — the trainer code enforces this
+  structurally (the party update consumes only scalars + its own state).
+
+The host-level REAL asynchronous executor (threads, stragglers, wall-clock)
+lives in core/async_host.py; this module is the jit-able scale path and the
+object of the convergence theorems.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VFLConfig
+from repro.core import zoo
+from repro.core.vfl import VFLModel
+from repro.utils.prng import fold_name
+
+
+class AsyState(NamedTuple):
+    w0: dict
+    parties: dict          # stacked (q, ...)
+    hist: dict             # ring buffer (tau+1, q, ...)
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+def _gather_party(tree, m):
+    return jax.tree.map(lambda a: a[m], tree)
+
+
+def _stale_parties(hist, slots):
+    """hist leaves: (tau+1, q, ...); slots: (q,) int -> (q, ...) params."""
+    q = slots.shape[0]
+    return jax.tree.map(
+        lambda h: h[slots, jnp.arange(q)], hist)
+
+
+def init_state(model: VFLModel, vfl: VFLConfig, key) -> AsyState:
+    k0, k1 = jax.random.split(key)
+    w0 = model.init_server(k0)
+    parties = model.init_parties_stacked(k1)
+    hist = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (vfl.max_delay + 1,) + a.shape),
+        parties)
+    return AsyState(w0, parties, hist, jnp.zeros((), jnp.int32), key)
+
+
+def _activation_probs(vfl: VFLConfig):
+    if vfl.activation_probs is not None:
+        p = jnp.asarray(vfl.activation_probs, jnp.float32)
+        return p / p.sum()
+    return jnp.full((vfl.num_parties,), 1.0 / vfl.num_parties)
+
+
+def asyrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch):
+    """One AsyREVEL iteration (Algorithm 1 lines 2-11)."""
+    q, tau, mu = vfl.num_parties, vfl.max_delay, vfl.mu
+    key = jax.random.fold_in(state.key, state.step)
+    k_m, k_d, k_u, k_u0 = (fold_name(key, s)
+                           for s in ("party", "delay", "u", "u0"))
+    x = model.party_args(batch)
+    y = model.server_args(batch)
+
+    # --- Assumption 3: activated party; Assumption 4: bounded delays -----
+    m_t = jax.random.categorical(k_m, jnp.log(_activation_probs(vfl)))
+    delays = jax.random.randint(k_d, (q,), 0, tau + 1)
+    delays = delays.at[m_t].set(0)         # a party's own params are fresh
+    # w^{t-delta} = params after step t-1-delta; hist[s] holds the params
+    # written at the end of the latest step with step % (tau+1) == s.
+    slots = (state.step - 1 - delays) % (tau + 1)
+    stale = _stale_parties(state.hist, slots)
+
+    # --- step 4: party m computes c_m and c_hat_m on PRIVATE data --------
+    cs = model.all_party_outputs(stale, x)                  # stale c's
+    w_m = _gather_party(state.parties, m_t)
+    x_m = model.slice_features(x, m_t)
+    h = model.server_forward(state.w0, cs, y)               # h_{i,m}
+    reg0 = model.regularizer(w_m)
+
+    # one or several directions (num_directions > 1 = variance-reduced
+    # averaging, beyond-paper; each direction costs one extra (c_hat,
+    # h_bar) round trip — still only function values)
+    def one_direction(k):
+        w_m_pert, u = zoo.perturb(w_m, k, mu, vfl.direction)
+        c_hat = model.party_forward(w_m_pert, x_m, m_t)
+        cs_hat = model.replace_party_output(cs, c_hat, m_t)
+        h_bar = model.server_forward(state.w0, cs_hat, y)   # h-bar_{i,m}
+        reg1 = model.regularizer(w_m_pert)
+        coeff = zoo.zo_coefficient(h_bar + vfl.lam * reg1,
+                                   h + vfl.lam * reg0, mu)
+        return zoo.zo_gradient(u, coeff)
+
+    K = vfl.num_directions
+    if K == 1 and vfl.seed_replay:
+        # MeZO-style: keep only the scalar coefficient; regenerate u at the
+        # update site (the fused-kernel path on TPU — kernels/zo_update)
+        w_m_pert, _ = zoo.perturb(w_m, k_u, mu, vfl.direction)
+        c_hat = model.party_forward(w_m_pert, x_m, m_t)
+        h_bar = model.server_forward(
+            state.w0, model.replace_party_output(cs, c_hat, m_t), y)
+        coeff = zoo.zo_coefficient(
+            h_bar + vfl.lam * model.regularizer(w_m_pert),
+            h + vfl.lam * reg0, mu)
+        g_m = zoo.zo_gradient_from_seed(k_u, w_m, vfl.direction, coeff)
+    elif K == 1:
+        g_m = one_direction(k_u)
+    else:
+        gs = jax.vmap(one_direction)(jax.random.split(k_u, K))
+        g_m = jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
+
+    # --- step 9: server's own estimate (Eq. 17) --------------------------
+    w0_pert, u_0 = zoo.perturb(state.w0, k_u0, mu, vfl.direction)
+    h_hat = model.server_forward(w0_pert, cs, y)            # h-hat_{i,m}
+
+    # --- step 6-7: party update (Eq. 15) ----------------------------------
+    parties = jax.tree.map(
+        lambda a, g: a.at[m_t].add(
+            (-vfl.lr_party * g).astype(a.dtype)), state.parties, g_m)
+
+    # --- step 10-11: server update (Eq. 17) -------------------------------
+    if vfl.perturb_server:
+        coeff_0 = zoo.zo_coefficient(h_hat, h, mu)
+        g_0 = zoo.zo_gradient(u_0, coeff_0)
+        w0 = jax.tree.map(
+            lambda a, g: (a - vfl.lr_server * g).astype(a.dtype),
+            state.w0, g_0)
+    else:
+        w0 = state.w0
+
+    hist = jax.tree.map(
+        lambda hbuf, p: hbuf.at[state.step % (tau + 1)].set(p),
+        state.hist, parties)
+    new_state = AsyState(w0, parties, hist, state.step + 1, state.key)
+    return new_state, h
+
+
+def synrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch):
+    """Synchronous counterpart: every round ALL parties (and the server)
+    compute fresh c's, perturb, and update together — no staleness."""
+    q, mu = vfl.num_parties, vfl.mu
+    key = jax.random.fold_in(state.key, state.step)
+    x = model.party_args(batch)
+    y = model.server_args(batch)
+    cs = model.all_party_outputs(state.parties, x)
+    h = model.server_forward(state.w0, cs, y)
+
+    new_parties = state.parties
+    for m in range(q):
+        k_u = fold_name(key, f"u{m}")
+        w_m = _gather_party(state.parties, m)
+        w_m_pert, u_m = zoo.perturb(w_m, k_u, mu, vfl.direction)
+        c_hat = model.party_forward(w_m_pert, model.slice_features(x, m), m)
+        cs_hat = model.replace_party_output(cs, c_hat, m)
+        h_bar = model.server_forward(state.w0, cs_hat, y)
+        coeff = zoo.zo_coefficient(
+            h_bar + vfl.lam * model.regularizer(w_m_pert),
+            h + vfl.lam * model.regularizer(w_m), mu)
+        g_m = zoo.zo_gradient(u_m, coeff)
+        new_parties = jax.tree.map(
+            lambda a, g, mm=m: a.at[mm].add(
+                (-vfl.lr_party * g).astype(a.dtype)), new_parties, g_m)
+
+    if vfl.perturb_server:
+        w0_pert, u_0 = zoo.perturb(state.w0, fold_name(key, "u0"), mu,
+                                   vfl.direction)
+        h_hat = model.server_forward(w0_pert, cs, y)
+        coeff_0 = zoo.zo_coefficient(h_hat, h, mu)
+        w0 = jax.tree.map(
+            lambda a, g: (a - vfl.lr_server * g).astype(a.dtype),
+            state.w0, zoo.zo_gradient(u_0, coeff_0))
+    else:
+        w0 = state.w0
+    new_state = AsyState(w0, new_parties, state.hist, state.step + 1,
+                         state.key)
+    return new_state, h
+
+
+@functools.partial(jax.jit, static_argnames=("model", "vfl", "steps",
+                                             "batch_size", "algorithm"))
+def train(model: VFLModel, vfl: VFLConfig, data, key, steps: int,
+          batch_size: int, algorithm: str = "asyrevel"):
+    """Scan `steps` iterations over random minibatches of `data`.
+
+    data: pytree of arrays with a shared leading sample dim.
+    Returns (final_state, per-step losses).
+    """
+    n = jax.tree.leaves(data)[0].shape[0]
+    state = init_state(model, vfl, key)
+    step_fn = asyrevel_step if algorithm == "asyrevel" else synrevel_step
+
+    def body(state, k):
+        idx = jax.random.randint(k, (batch_size,), 0, n)
+        batch = jax.tree.map(lambda a: a[idx], data)
+        return step_fn(model, vfl, state, batch)
+
+    keys = jax.random.split(jax.random.fold_in(key, 7), steps)
+    state, losses = jax.lax.scan(body, state, keys)
+    return state, losses

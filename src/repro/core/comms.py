@@ -1,0 +1,52 @@
+"""Per-round communication overhead (PRCO) accounting — paper Table 3.
+
+For one (party m, minibatch B) round:
+  ZOO-VFL (ours): up   = 2 * B * c_dim * 4 bytes     (c, c_hat)
+                  down = 2 * 4 bytes                  (h, h_bar scalars)
+  TIG           : up   = B * c_dim * 4
+                  down = B * c_dim * 4                (dL/dc_m per sample)
+  TG (param/grad transmitting): up/down = d_m * 4    (the local gradient /
+                  parameter block — dimension d_l in the paper's Table 3)
+
+The paper's reported "ratios of time spending" compare transmitting a
+d_l-dimensional gradient against transmitting the function values; we report
+the same ratio in bytes plus a latency model ratio.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+FLOAT = 4
+
+
+@dataclass(frozen=True)
+class RoundComms:
+    up_bytes: int
+    down_bytes: int
+
+    @property
+    def total(self) -> int:
+        return self.up_bytes + self.down_bytes
+
+
+def zoo_vfl_round(batch: int, c_dim: int = 1) -> RoundComms:
+    return RoundComms(2 * batch * c_dim * FLOAT, 2 * FLOAT)
+
+
+def tig_round(batch: int, c_dim: int = 1) -> RoundComms:
+    return RoundComms(batch * c_dim * FLOAT, batch * c_dim * FLOAT)
+
+
+def tg_round(d_m: int) -> RoundComms:
+    return RoundComms(d_m * FLOAT, d_m * FLOAT)
+
+
+def paper_ratio(d_l: int, batch: int = 1, c_dim: int = 1,
+                latency_s: float = 5e-5, bandwidth_Bps: float = 1e8) -> float:
+    """Time(TG gradient of dim d_l) / Time(function values) under a
+    latency+bandwidth channel model — the quantity in the paper's Table 3."""
+    def t(n_bytes):
+        return latency_s + n_bytes / bandwidth_Bps
+    grad_t = t(tg_round(d_l).total)
+    fv_t = t(zoo_vfl_round(batch, c_dim).total)
+    return grad_t / fv_t

@@ -1,0 +1,130 @@
+"""Privacy security of ZOO-VFL (Theorem 1) — executable attack simulations.
+
+For each attack the paper discusses, we implement BOTH sides:
+  * against a gradient/parameter-transmitting framework (TIG/TG-style), where
+    the attack succeeds, and
+  * against ZOO-VFL, where the adversary only ever observes function values —
+    and we measure that the attack collapses to chance / unidentifiable.
+
+Attacks (paper Section 2.3):
+  1. feature inference, honest-but-curious (Gu 2020 / Yang 2019b): adversary
+     holds intermediate results z_i = w^T x_i across rounds and solves for
+     (w, x). n equations / >n unknowns -> underdetermined in ZOO-VFL.
+  2. label inference (Liu 2020): the sign/structure of the intermediate
+     gradient g_i = dL/dH_i reveals y_i. ZOO-VFL never transmits g_i; the
+     only observable scalar h is label-symmetric.
+  3. reverse multiplication (Weng 2020, colluding): uses w_t^T x_i -
+     w_{t-1}^T x_i = -eta g_t x_i across epochs — needs the gradient.
+  4. gradient-replacement backdoor (Liu 2020, malicious): replaces the
+     intermediate gradient of a poisoned sample with a recorded one. With no
+     transmitted gradient the adversary can only replay FUNCTION VALUES —
+     we show the induced update equals a harmless ZO step with a wrong
+     scalar, bounded by lr * |coeff| (no targeted direction control).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- attack 1 -
+
+def feature_inference_attack(z_rounds, x_dim: int):
+    """Least-squares recovery of x from observed per-round z_i = w_t^T x_i.
+
+    z_rounds: (T, n) observations for T rounds, n samples — the adversary
+    ALSO needs the w_t to set up the linear system; under ZOO-VFL it does not
+    have them, so the best it can do is treat w_t as unknowns too:
+    T*n equations, T*d + n*d unknowns -> underdetermined for d > 1.
+    Returns the (under)determination ratio; < 1 means provably unsolvable.
+    """
+    T, n = z_rounds.shape
+    equations = T * n
+    unknowns = T * x_dim + n * x_dim
+    return equations / unknowns
+
+
+def feature_inference_with_grads(ws, zs, x_true):
+    """The SAME attack when the framework leaks w_t (TG-style): now it is an
+    ordinary linear solve — returns the recovery error (≈0 => leak)."""
+    W = np.stack(ws)                     # (T, d)
+    z = np.stack(zs)                     # (T, n)
+    x_rec, *_ = np.linalg.lstsq(W, z, rcond=None)   # (d, n)
+    err = np.linalg.norm(x_rec.T - x_true) / np.linalg.norm(x_true)
+    return float(err)
+
+
+# ---------------------------------------------------------------- attack 2 -
+
+def label_inference_from_intermediate_grads(g, y_true):
+    """TIG leak: for CE-style losses, dL/dH_i is negative on the true-label
+    coordinate (softmax(p)-onehot(y)) or sign-coupled to y in the binary
+    case. Returns attack accuracy (1.0 => total leak)."""
+    g = np.asarray(g)
+    if g.ndim == 1:                       # binary: g_i = -y * sigma(-y z)
+        pred = -np.sign(g)
+        return float(np.mean(pred == np.sign(y_true)))
+    pred = np.argmin(g, axis=-1)          # multiclass: most-negative coord
+    return float(np.mean(pred == y_true))
+
+
+def label_inference_from_function_values(h, y_true, rng=None):
+    """ZOO-VFL observable: per-round scalars h (and h_bar). They aggregate
+    over the whole minibatch and are label-permutation symmetric — the
+    adversary's best estimator is chance. We simulate the strongest simple
+    adversary (threshold on h) and return its accuracy."""
+    rng = rng or np.random.default_rng(0)
+    h = np.asarray(h, np.float64)
+    y = np.sign(np.asarray(y_true))
+    # h is a SINGLE scalar per round shared by all samples in the batch:
+    # any per-sample decision derived from it is constant within the batch.
+    thresh = np.median(h)
+    pred = np.where(h[:, None] > thresh, 1.0, -1.0)
+    acc = np.mean(pred == y[None, :])
+    return float(acc)
+
+
+# ---------------------------------------------------------------- attack 3 -
+
+def reverse_multiplication_attack(z_t, z_tm1, eta, g_t=None):
+    """RMA: x_i = (z_{t-1,i} - z_{t,i}) / (eta * g_t). Feasible ONLY with
+    g_t. Returns recovered x when g_t is given, else None (ZOO-VFL case:
+    the quantity the attack divides by was never transmitted)."""
+    if g_t is None:
+        return None
+    return (np.asarray(z_tm1) - np.asarray(z_t)) / (eta * np.asarray(g_t))
+
+
+# ---------------------------------------------------------------- attack 4 -
+
+def backdoor_update_influence(lr: float, mu: float, h_replay: float,
+                              h_true: float, w_dim: int, key=None):
+    """Gradient-replacement backdoor, adapted to what a malicious party CAN
+    do in ZOO-VFL: replay a stale/forged scalar h. The induced parameter
+    deviation is ||lr * ((h_replay-h_true)/mu) * u|| with u RANDOM — the
+    adversary cannot point it at a trigger direction. Returns (norm of the
+    deviation, cosine similarity to an adversary-chosen target direction).
+    """
+    key = key if key is not None else jax.random.key(0)
+    k1, k2 = jax.random.split(key)
+    u = jax.random.normal(k1, (w_dim,))
+    target = jax.random.normal(k2, (w_dim,))
+    dev = lr * (h_replay - h_true) / mu * u
+    cos = jnp.dot(dev, target) / (jnp.linalg.norm(dev)
+                                  * jnp.linalg.norm(target) + 1e-12)
+    return float(jnp.linalg.norm(dev)), float(jnp.abs(cos))
+
+
+def exposure_report(framework: str) -> dict:
+    """What each framework structurally exposes per round (Table 1 logic)."""
+    if framework == "zoo-vfl":
+        return {"model_params": False, "intermediate_grads": False,
+                "local_grads": False, "function_values": True}
+    if framework == "tig":
+        return {"model_params": False, "intermediate_grads": True,
+                "local_grads": False, "function_values": True}
+    if framework == "tg":
+        return {"model_params": True, "intermediate_grads": True,
+                "local_grads": True, "function_values": True}
+    raise ValueError(framework)

@@ -1,0 +1,94 @@
+"""TIG baseline — split learning that Transmits the Intermediate Gradient
+(Liu et al. 2019a; Vepakomma et al. 2018), the paper's comparison framework.
+
+Structure identical to ours (party towers -> server head) but the server
+sends dL/dc_m back to party m, which chain-rules through its local model.
+Two consequences the paper measures:
+  * TIG CANNOT train black-box models (no gradient is available through a
+    black box) — ``tig_train`` raises on models flagged black_box, and the
+    convergence benchmark shows the resulting flat loss;
+  * its per-round communication is the intermediate/local gradient
+    (dimension d_l), vs scalars for ZOO-VFL (Table 3) — accounted in
+    core/comms.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VFLConfig
+from repro.core.vfl import VFLModel
+from repro.utils.prng import fold_name
+
+
+class TIGState(NamedTuple):
+    w0: dict
+    parties: dict
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+class BlackBoxError(RuntimeError):
+    pass
+
+
+def tig_step(model: VFLModel, vfl: VFLConfig, state: TIGState, batch):
+    """Asynchronous split-learning step: one party per iteration gets its
+    intermediate gradient from the server and backprops locally."""
+    q = vfl.num_parties
+    key = jax.random.fold_in(state.key, state.step)
+    m_t = jax.random.categorical(
+        fold_name(key, "party"),
+        jnp.zeros((q,)))
+    x = model.party_args(batch)
+    y = model.server_args(batch)
+
+    def loss_fn(w_m, w0):
+        cs = model.all_party_outputs(state.parties, x)
+        c_m = model.party_forward(w_m, model.slice_features(x, m_t), m_t)
+        cs = model.replace_party_output(cs, c_m, m_t)
+        return (model.server_forward(w0, cs, y)
+                + vfl.lam * model.regularizer(w_m))
+
+    w_m = jax.tree.map(lambda a: a[m_t], state.parties)
+    (h, (g_m, g_0)) = (loss_fn(w_m, state.w0),
+                       jax.grad(loss_fn, argnums=(0, 1))(w_m, state.w0))
+    parties = jax.tree.map(
+        lambda a, g: a.at[m_t].add((-vfl.lr_party * g).astype(a.dtype)),
+        state.parties, g_m)
+    w0 = jax.tree.map(lambda a, g: (a - vfl.lr_server * g).astype(a.dtype),
+                      state.w0, g_0)
+    return TIGState(w0, parties, state.step + 1, state.key), h
+
+
+@functools.partial(jax.jit, static_argnames=("model", "vfl", "steps",
+                                             "batch_size"))
+def _train_jit(model, vfl, data, key, steps, batch_size):
+    n = jax.tree.leaves(data)[0].shape[0]
+    k0, k1 = jax.random.split(key)
+    state = TIGState(model.init_server(k0), model.init_parties_stacked(k1),
+                     jnp.zeros((), jnp.int32), key)
+
+    def body(state, k):
+        idx = jax.random.randint(k, (batch_size,), 0, n)
+        batch = jax.tree.map(lambda a: a[idx], data)
+        return tig_step(model, vfl, state, batch)
+
+    keys = jax.random.split(jax.random.fold_in(key, 11), steps)
+    return jax.lax.scan(body, state, keys)
+
+
+def tig_train(model: VFLModel, vfl: VFLConfig, data, key, steps: int,
+              batch_size: int, black_box: bool = False):
+    """Train with TIG. If the models are black boxes, the intermediate
+    gradient simply does not exist — the defining failure the paper's Fig. 3
+    demonstrates."""
+    if black_box:
+        raise BlackBoxError(
+            "TIG requires dL/dc_m from the server and dc_m/dw_m through the "
+            "local model; neither exists for black-box models. "
+            "(ZOO-VFL/AsyREVEL needs only the function values.)")
+    return _train_jit(model, vfl, data, key, steps, batch_size)

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (make_classification, make_lm_dataset,  # noqa
+                                  make_mnist_like, PAPER_DATASETS,
+                                  make_paper_dataset)
+from repro.data.vertical import vertical_partition  # noqa
+from repro.data.pipeline import DataLoader  # noqa

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dual_matmul_ref(x, w, u, *, mu: float):
+    x32 = x.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    # match kernel arithmetic: perturbation added in w's dtype
+    wp = (w + mu * u.astype(w.dtype)).astype(jnp.float32)
+    y0 = jnp.dot(x32, w32).astype(x.dtype)
+    y1 = jnp.dot(x32, wp).astype(x.dtype)
+    return y0, y1
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q,k,v: (BH, S, hd)."""
+    BH, S, hd = q.shape
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def zo_update_ref(w, bits, scale):
+    u = jnp.where((bits & 1) == 1, 1.0, -1.0).astype(jnp.float32)
+    return (w.astype(jnp.float32)
+            - scale.astype(jnp.float32) * u).astype(w.dtype)

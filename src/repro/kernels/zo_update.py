@@ -1,0 +1,54 @@
+"""Fused seed-replay ZO update kernel (beyond-paper, MeZO-style).
+
+AsyREVEL's update is w <- w - lr * coeff * u where coeff is ONE scalar per
+step and u is the random direction. Materializing u doubles parameter
+traffic. With seed-replay + Rademacher directions (u_i = +-1, E[uu^T] = I —
+a valid two-point-estimator law), u derives from one random BIT per
+element: the kernel reads w and the packed bits, forms u in-register, and
+writes the update — no f32 u ever exists in HBM. (On real TPU the bits
+themselves come from the on-chip PRNG via pltpu.prng_random_bits; here they
+are a uint32 operand so the CPU-interpret oracle is bit-exact.)
+
+coeff arrives in SMEM as a (1,1) scalar so the same compiled kernel serves
+every step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(scale_ref, w_ref, bits_ref, out_ref):
+    # u = +1 where bit set else -1
+    u = jnp.where((bits_ref[...] & 1) == 1, 1.0, -1.0).astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[...] = (w - scale_ref[0, 0] * u).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def zo_update_pallas(w, bits, scale, *, block: int = 1024,
+                     interpret: bool = True):
+    """w: (N,) params; bits: (N,) uint32; scale: () f32 = lr*coeff.
+
+    Returns w - scale * rademacher(bits).
+    """
+    (N,) = w.shape
+    block = min(block, N)
+    assert N % block == 0
+    scale2d = scale.reshape(1, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        grid=(N // block,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), w.dtype),
+        interpret=interpret,
+    )(scale2d, w, bits)

@@ -1,0 +1,391 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init). 512 placeholder host devices exist ONLY here,
+# for the production-mesh dry-run; tests/benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, WITHOUT allocating anything (ShapeDtypeStruct inputs).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod ...
+
+Per run it records: lower/compile wall time, compiled.cost_analysis() flops
+and bytes, memory_analysis() (per-device bytes — proves it fits),
+collective-bytes by op kind parsed from the post-partitioning HLO, and the
+analytic MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE) for the §Roofline
+"useful compute" ratio.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, VFLConfig, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import hlo_analysis
+from repro.launch import steps as step_lib
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import build_model
+from repro.sharding import batch_pspecs, cache_pspecs, param_pspecs
+from repro.sharding.ctx import activation_mesh
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+# ----------------------------------------------------------- input specs ---
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": sds((B, S), i32)}
+        if shape.kind == "train":
+            specs["targets"] = sds((B, S), i32)
+        if cfg.enc_dec:
+            specs["frames"] = sds((B, cfg.encoder_frames, cfg.d_model),
+                                  jnp.bfloat16)
+        if cfg.frontend == "vq_stub":
+            specs["modality_mask"] = sds((B, S), i32)
+        return specs
+    # decode: ONE new token against a seq_len-deep cache
+    return {"token": sds((B, 1), i32), "pos": sds((), i32)}
+
+
+def _long_ctx_variant(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """long_500k on full-attention archs runs the sliding-window variant
+    (window 4096) — DESIGN.md §5. SSM/hybrid archs are natively
+    sub-quadratic and unchanged."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return cfg.replace(sliding_window=4096)
+    return cfg
+
+
+# --- §Perf hillclimb variants (EXPERIMENTS.md §Perf records each) ---------
+VARIANTS = {
+    # A1: TP-aligned head padding (56->64 heads): kills the contracting-dim
+    # head sharding + per-block score all-reduce on 16-way TP
+    "padheads64": lambda cfg: cfg.replace(num_heads=64),
+    # B1: pad vocab to a multiple of 256 so lm_head/logits shard instead of
+    # replicating (minicpm 122753 -> 122880)
+    "padvocab": lambda cfg: cfg.replace(
+        vocab_size=-(-cfg.vocab_size // 256) * 256),
+    # A2/C2: keep the residual stream bf16 through collectives
+    "padheads64_padvocab": lambda cfg: cfg.replace(
+        num_heads=64, vocab_size=-(-cfg.vocab_size // 256) * 256),
+    # B2: minicpm is MHA(36) — pad BOTH q and kv heads to 48 (mult of 16)
+    "padheads48mha_padvocab": lambda cfg: cfg.replace(
+        num_heads=48, num_kv_heads=48,
+        vocab_size=-(-cfg.vocab_size // 256) * 256),
+    # C2: flash cross-entropy — never materialize (B,S,V) logits
+    "chunkce": lambda cfg: cfg.replace(chunked_ce=True),
+    # serving: int8-quantized KV cache (per-position/head scales)
+    "kvint8": lambda cfg: cfg.replace(kv_cache_dtype="int8"),
+}
+
+
+# ------------------------------------------------------------- analyses ---
+
+def cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+        out = {}
+        for k in keys:
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        if not out and isinstance(ma, dict):
+            out = {k: int(v) for k, v in ma.items()}
+        return out
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens
+    processed. Decode steps process B tokens."""
+    n_active = cfg.num_active_params()
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n_active * tokens)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> dict:
+    return {
+        "compute_s": flops / (chips * PEAK_FLOPS_BF16),
+        "memory_s": hbm_bytes / (chips * HBM_BW),
+        "collective_s": coll_bytes / (chips * ICI_BW),
+    }
+
+
+# --------------------------------------------------------------- lowering --
+
+def shardings(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs)
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool = False,
+               mode: str = "auto", variant: str | None = None,
+               strategy: str = "2d", microbatches: int = 1) -> dict:
+    """Lower+compile one (arch x shape). mode: auto|train|prefill|decode|
+    vfl_zoo (the paper's technique). variant: §Perf tweak from VARIANTS.
+    strategy: '2d' (megatron+fsdp) | 'zero3' (params sharded over all
+    axes, no tensor parallelism)."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = _long_ctx_variant(get_config(arch), shape)
+    if variant:
+        cfg = VARIANTS[variant](cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    model = build_model(cfg)
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "chips": chips, "mode": mode, "ok": False,
+           "params": cfg.num_params(), "active_params":
+           cfg.num_active_params()}
+    t0 = time.perf_counter()
+
+    if mode == "auto":
+        mode = {"train": "train", "prefill": "prefill",
+                "decode": "decode"}[shape.kind]
+    rec["mode"] = mode
+
+    rec["variant"] = variant
+    rec["strategy"] = strategy
+    rec["microbatches"] = microbatches
+    ba = ("pod", "data", "model") if strategy == "zero3" else ("pod", "data")
+    specs = input_specs(cfg, shape)
+    if mode == "vfl_zoo":
+        lowered = _lower_vfl_zoo(model, cfg, shape, mesh, specs,
+                                 strategy=strategy, batch_axes=ba)
+    elif mode == "train":
+        lowered = _lower_train(model, cfg, mesh, specs, strategy=strategy,
+                               batch_axes=ba, microbatches=microbatches)
+    elif mode == "prefill":
+        lowered = _lower_prefill(model, cfg, mesh, specs, strategy=strategy,
+                                 batch_axes=ba)
+    else:
+        lowered = _lower_decode(model, cfg, shape, mesh, specs,
+                                strategy=strategy, batch_axes=ba)
+    rec["lower_s"] = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    rec["compile_s"] = time.perf_counter() - t1
+    rec["cost"] = cost_dict(compiled)
+    rec["memory"] = memory_dict(compiled)
+    hlo = compiled.as_text()
+    # loop-corrected per-device analysis (cost_analysis counts scan bodies
+    # once; hlo_analysis multiplies by trip counts — see that module)
+    ana = hlo_analysis.analyze(hlo)
+    rec["hlo_analysis"] = {
+        "dot_flops_per_device": ana["dot_flops"],
+        "dot_bytes_per_device": ana["dot_bytes"],
+        "collective_bytes": ana["collective_bytes"],
+        "collective_counts": ana["collective_counts"],
+        "loop_nest": ana["loop_nest"],
+    }
+    rec["hlo_bytes_len"] = len(hlo)
+    # CPU cost analysis reports the per-device (partitioned) module
+    rec["hlo_flops_per_device"] = ana["dot_flops"]
+    rec["hlo_flops_global"] = ana["dot_flops"] * chips
+    # HBM traffic lower bound: dot operand/result bytes (loop-corrected);
+    # raw cost_analysis "bytes accessed" kept for reference in rec["cost"]
+    hbm = ana["dot_bytes"]
+    rec["hlo_bytes_per_device"] = hbm
+    rec["model_flops"] = model_flops(cfg, shape)
+    rec["useful_flops_ratio"] = (
+        rec["model_flops"] / rec["hlo_flops_global"]
+        if rec["hlo_flops_global"] else None)
+    coll = ana["total_collective_bytes"]
+    rec["collective_bytes_per_device"] = coll
+    rec["roofline"] = roofline_terms(rec["hlo_flops_global"],
+                                     hbm * chips, coll * chips, chips)
+    terms = rec["roofline"]
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["ok"] = True
+    return rec
+
+
+def _lower_train(model, cfg, mesh, specs, strategy="2d",
+                 batch_axes=("pod", "data"), microbatches=1):
+    state_shape = jax.eval_shape(
+        lambda k: step_lib.make_train_state(model, k), jax.random.key(0))
+    pspecs = param_pspecs(state_shape.params, mesh, strategy=strategy)
+    state_sh = shardings(
+        step_lib.TrainState(pspecs, {"m": pspecs, "v": pspecs, "t": P()},
+                            P()), mesh)
+    batch_sh = shardings(batch_pspecs(specs, mesh, batch_axes), mesh)
+    step = step_lib.make_train_step(model, microbatches=microbatches)
+    with activation_mesh(mesh, batch_axes=batch_axes):
+        return jax.jit(step, in_shardings=(state_sh, batch_sh)).lower(
+            state_shape, specs)
+
+
+def _lower_prefill(model, cfg, mesh, specs, strategy="2d",
+                   batch_axes=("pod", "data")):
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    p_sh = shardings(param_pspecs(params_shape, mesh, strategy=strategy),
+                     mesh)
+    b_sh = shardings(batch_pspecs(specs, mesh, batch_axes), mesh)
+    step = step_lib.make_prefill_step(model)
+    with activation_mesh(mesh, batch_axes=batch_axes):
+        return jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+            params_shape, specs)
+
+
+def _lower_decode(model, cfg, shape, mesh, specs, strategy="2d",
+                  batch_axes=("pod", "data")):
+    B = shape.global_batch
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    frames = None
+    if cfg.enc_dec:
+        frames = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    cache_shape = jax.eval_shape(
+        lambda p, f: model.init_cache(p, B, shape.seq_len, frames=f),
+        params_shape, frames)
+    p_sh = shardings(param_pspecs(params_shape, mesh, strategy=strategy),
+                     mesh)
+    c_sh = shardings(cache_pspecs(cache_shape, mesh), mesh)
+    tok_sh = shardings(batch_pspecs(
+        {"token": specs["token"]}, mesh, batch_axes), mesh)["token"]
+    step = step_lib.make_serve_step(model)
+    with activation_mesh(mesh, batch_axes=batch_axes):
+        # serving loops donate the cache (in-place update); without this
+        # the functional cache copy double-buffers ~2x cache bytes
+        return jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh,
+                                           NamedSharding(mesh, P())),
+                       donate_argnums=(1,)).lower(
+            params_shape, cache_shape, specs["token"], specs["pos"])
+
+
+def _lower_vfl_zoo(model, cfg, shape, mesh, specs, strategy="2d",
+                   batch_axes=("pod", "data")):
+    """The paper's AsyREVEL step at architecture scale."""
+    q = 8
+    vfl = VFLConfig(num_parties=q, mu=1e-3, lr_party=1e-3,
+                    lr_server=1e-3 / q, max_delay=4)
+    vm, init, step = step_lib.make_vfl_zoo_step(model, vfl)
+    state_shape = jax.eval_shape(init, jax.random.key(0))
+    w0_specs = param_pspecs(state_shape.w0, mesh, strategy=strategy)
+
+    mp_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def party_spec(leaf):
+        # stacked (q, V, dq) embeddings: shard vocab over 'model' when the
+        # vocab divides the axis (else replicate — e.g. 122753, 32001)
+        if (leaf.ndim == 3 and leaf.shape[1] == cfg.vocab_size
+                and leaf.shape[1] % mp_size == 0):
+            return P(None, "model")
+        return P()
+
+    parties_specs = jax.tree.map(party_spec, state_shape.parties)
+    hist_specs = jax.tree.map(
+        lambda s: P(*((None,) + tuple(s) if s else (None,))),
+        parties_specs)
+    state_sh = shardings(
+        type(state_shape)(w0_specs, parties_specs, hist_specs, P(), P()),
+        mesh)
+    batch_sh = shardings(batch_pspecs(specs, mesh, batch_axes), mesh)
+    with activation_mesh(mesh, batch_axes=batch_axes):
+        return jax.jit(step, in_shardings=(state_sh, batch_sh)).lower(
+            state_shape, specs)
+
+
+# ------------------------------------------------------------------ main ---
+
+def run_one(arch, shape_name, multi_pod, mode="auto", variant=None,
+            strategy="2d", microbatches=1):
+    try:
+        rec = lower_pair(arch, shape_name, multi_pod, mode, variant,
+                         strategy, microbatches)
+        print(f"OK  {arch:24s} {shape_name:12s} pod={int(multi_pod)} "
+              f"mode={rec['mode']:8s} lower={rec['lower_s']:.1f}s "
+              f"compile={rec['compile_s']:.1f}s "
+              f"bottleneck={rec.get('bottleneck')}", flush=True)
+        return rec
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        print(f"FAIL {arch} {shape_name} pod={int(multi_pod)}: {e}",
+              flush=True)
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "mode": mode, "ok": False, "error": str(e)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="auto")
+    ap.add_argument("--variant", default=None,
+                    help="|".join(VARIANTS))
+    ap.add_argument("--strategy", default="2d", choices=["2d", "zero3"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    pairs = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    for a, s in pairs:
+        tag = f"{a}_{s}_{'mp' if args.multi_pod else 'sp'}_{args.mode}"
+        if args.variant:
+            tag += f"_{args.variant}"
+        if args.strategy != "2d":
+            tag += f"_{args.strategy}"
+        if args.microbatches > 1:
+            tag += f"_mb{args.microbatches}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"SKIP {tag} (cached)", flush=True)
+            continue
+        rec = run_one(a, s, args.multi_pod, args.mode, args.variant,
+                      args.strategy, args.microbatches)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

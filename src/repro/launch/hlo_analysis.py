@@ -1,0 +1,268 @@
+"""Post-SPMD HLO text analysis for the roofline terms.
+
+XLA's executable ``cost_analysis()`` counts each op ONCE even inside a
+``while`` loop (lax.scan), so scanned-layer models under-report flops,
+bytes and collectives by the trip count. This module re-derives the numbers
+from ``compiled.as_text()`` with loop-body multipliers:
+
+  1. split the module into computations;
+  2. find every `while` op, its body/condition computations, and the trip
+     count (the constant the induction variable is compared against);
+  3. propagate multipliers ENTRY=1 -> body = parent_mult * trip;
+  4. sum, per computation and weighted by multiplier:
+       * dot FLOPs        (2 * prod(result_dims) * prod(contract_dims))
+       * collective bytes (result-shape bytes, by collective kind)
+       * dot operand/result bytes (a lower bound on HBM traffic).
+
+This is exact for matmul-dominated models (ours) and conservative for
+elementwise traffic; EXPERIMENTS.md uses it together with the analytic
+model (benchmarks/analytic.py) and records both.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.-]+)\s*=\s*(\(?[^=]+?\)?)\s+"
+                     r"([\w-]+)\(")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s+\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w.-]+):\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\]\S*))")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(shapes_str: str):
+    m = _SHAPE_RE.search(shapes_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)      # %name -> shape str
+    whiles: list = field(default_factory=list)      # (body, cond)
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=lambda: {k: 0 for k in
+                                                      COLLECTIVES})
+    coll_counts: dict = field(default_factory=lambda: {k: 0 for k in
+                                                       COLLECTIVES})
+    max_constant: int = 0
+
+
+def split_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and "{" in line:
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            for pname, pshape in _PARAM_RE.findall(hdr.group(2)):
+                cur.shapes[pname] = pshape
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        cur.lines.append(line)
+        d = _DEF_RE.match(line)
+        if d:
+            cur.shapes[d.group(1)] = d.group(2)
+    return comps
+
+
+_ARRAY_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.-]+)\s*=\s*"
+                           r"([a-z0-9]+\[[\d,]*\]\S*)\s")
+
+
+def _result_text(line: str, op: str):
+    """Text between '= ' and ' <op>(' — the (possibly tuple) result type."""
+    eq = line.find("= ")
+    tok = f" {op}("
+    at = line.find(tok)
+    if eq < 0 or at < 0 or at < eq:
+        return None
+    return line[eq + 2:at]
+
+
+def _parse_ops(comp: Computation):
+    for line in comp.lines:
+        # record array-typed defs for dot-operand shape lookup
+        d = _ARRAY_DEF_RE.match(line)
+        if d:
+            comp.shapes[d.group(1)] = d.group(2)
+        if " while(" in line:
+            b = re.search(r"body=%?([\w.-]+)", line)
+            c = re.search(r"condition=%?([\w.-]+)", line)
+            if b:
+                comp.whiles.append((b.group(1), c.group(1) if c else None))
+            continue
+        for kind in COLLECTIVES:
+            for op in (kind, kind + "-start"):
+                rs = _result_text(line, op)
+                if rs is not None:
+                    # -start result tuples repeat operand+result; halve
+                    nb = _shape_bytes(rs)
+                    if op.endswith("-start"):
+                        nb //= 2
+                    comp.coll_bytes[kind] += nb
+                    comp.coll_counts[kind] += 1
+                    break
+            else:
+                continue
+            break
+        rs = _result_text(line, "dot")
+        if rs is not None:
+            flops, byts = _dot_cost(comp, line, rs)
+            comp.dot_flops += flops
+            comp.dot_bytes += byts
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            comp.max_constant = max(comp.max_constant, int(m.group(1)))
+
+
+def _dot_cost(comp: Computation, line: str, result_shape: str):
+    res_dims = _first_shape_dims(result_shape) or []
+    out_elems = 1
+    for d in res_dims:
+        out_elems *= d
+    mo = re.search(r"dot\(%?([\w.-]+),\s*%?([\w.-]+)\)", line)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    k = 1
+    if mo and mc:
+        lhs_shape = comp.shapes.get(mo.group(1), "")
+        dims = _first_shape_dims(lhs_shape)
+        if dims:
+            for ci in mc.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    flops = 2.0 * out_elems * k
+    byts = _shape_bytes(result_shape)
+    if mo:
+        byts += _shape_bytes(comp.shapes.get(mo.group(1), ""))
+        byts += _shape_bytes(comp.shapes.get(mo.group(2), ""))
+    return flops, byts
+
+
+def top_collectives(hlo: str, k: int = 12):
+    """(weighted_bytes, mult, bytes, kind, shape, op_name) for the k
+    costliest collectives — the §Perf profiling view."""
+    comps = split_computations(hlo)
+    for c in comps.values():
+        _parse_ops(c)
+    m = re.search(r"^ENTRY\s+%?([\w.-]+)", hlo, re.M)
+    entry = m.group(1) if m else next(iter(comps))
+    mult = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        name = stack.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for body, cond in comp.whiles:
+            trip = max(comps[cond].max_constant, 1) if cond in comps else 1
+            mult[body] = mult.get(body, 0.0) + mult[name] * trip
+            stack.append(body)
+    rows = []
+    for name, comp in comps.items():
+        w = mult.get(name, 0.0)
+        if w == 0.0 and name != entry:
+            continue
+        for line in comp.lines:
+            for kind in COLLECTIVES:
+                for op in (kind, kind + "-start"):
+                    rs = _result_text(line, op)
+                    if rs is not None:
+                        nb = _shape_bytes(rs)
+                        if op.endswith("-start"):
+                            nb //= 2
+                        meta = re.search(r'op_name="([^"]+)"', line)
+                        rows.append((w * nb, w, nb, kind, rs[:70],
+                                     (meta.group(1) if meta else "")[:100]))
+                        break
+                else:
+                    continue
+                break
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def analyze(hlo: str) -> dict:
+    comps = split_computations(hlo)
+    for c in comps.values():
+        _parse_ops(c)
+
+    entry = None
+    for name in comps:
+        if ".1_spmd" in name or name.startswith("main"):
+            pass
+    # ENTRY computation: the one never referenced as body/cond/fusion —
+    # find by "ENTRY" keyword in the original text instead:
+    m = re.search(r"^ENTRY\s+%?([\w.-]+)", hlo, re.M)
+    entry = m.group(1) if m else next(iter(comps))
+
+    # multipliers: walk from entry; while bodies multiply by trip count
+    mult: dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        name = stack.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m0 = mult[name]
+        for body, cond in comp.whiles:
+            trip = 1
+            if cond and cond in comps:
+                trip = max(comps[cond].max_constant, 1)
+            for sub in (body,):
+                if sub in comps:
+                    mult[sub] = mult.get(sub, 0.0) + m0 * trip
+                    stack.append(sub)
+
+    totals = {"dot_flops": 0.0, "dot_bytes": 0.0,
+              "collective_bytes": {k: 0.0 for k in COLLECTIVES},
+              "collective_counts": {k: 0 for k in COLLECTIVES},
+              "loop_nest": {}}
+    for name, comp in comps.items():
+        w = mult.get(name, 1.0 if name == entry else 0.0)
+        if w == 0.0:
+            # computations not reached via while bodies (fusions etc.) are
+            # invoked from their parent; their dots/collectives appear
+            # inline already in CPU HLO, so skip to avoid double-count.
+            continue
+        totals["dot_flops"] += w * comp.dot_flops
+        totals["dot_bytes"] += w * comp.dot_bytes
+        for k in COLLECTIVES:
+            totals["collective_bytes"][k] += w * comp.coll_bytes[k]
+            totals["collective_counts"][k] += comp.coll_counts[k]
+        if comp.whiles:
+            totals["loop_nest"][name] = {
+                "mult": w, "whiles": [(b, comps[c].max_constant
+                                       if c in comps else None)
+                                      for b, c in comp.whiles]}
+    totals["total_collective_bytes"] = sum(
+        totals["collective_bytes"].values())
+    return totals

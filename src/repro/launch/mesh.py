@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS for 512 host devices BEFORE any jax
+import; smoke tests must keep seeing 1 device).
+
+Production target: TPU v5e, 256 chips/pod (16x16), 2 pods for multi-pod.
+Axes: 'data' (batch / FSDP), 'model' (tensor / expert / sequence),
+'pod' (leading data-parallel axis across pods).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]     # dry-run exposes 512 host devices;
+    # the single-pod mesh uses the first 256 of them
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices actually exist (CPU runs, smoke tests)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+# hardware constants used by the roofline analysis (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,101 @@
+"""Step functions lowered by the dry-run and driven by train.py/serve.py.
+
+  train_step   — first-order Adam LM training (the substrate baseline)
+  vfl_zoo_step — the PAPER's technique at framework scale: party towers +
+                 backbone, AsyREVEL block-coordinate ZO updates
+  prefill_step — full-sequence forward (inference prefill)
+  serve_step   — ONE new token against a KV cache / SSM state
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, VFLConfig
+from repro.core import asyrevel
+from repro.core.vfl import TransformerVFLModel
+from repro.models.model import Model
+from repro.optim.optimizers import adam_init, adam_update
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: dict
+    step: jnp.ndarray
+
+
+def make_train_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, adam_init(params), jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: Model, schedule=None, grad_clip: float = 1.0,
+                    microbatches: int = 1):
+    """First-order Adam step. microbatches > 1 scans gradient accumulation
+    over batch slices — peak activation memory drops ~1/microbatches at
+    the same math (the fix for global-batch train shapes that exceed HBM;
+    EXPERIMENTS.md §Perf extensions)."""
+    sched = schedule or (lambda s: 3e-4)
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches,
+                                     a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def body(acc, b):
+                (loss_i, metrics_i), g_i = grads_of(state.params, b)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    acc_g, g_i)
+                return (acc_g, acc_l + loss_i / microbatches), metrics_i
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), metrics_all = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), mb)
+            metrics = jax.tree.map(lambda a: a[-1], metrics_all)
+        params, opt = adam_update(state.params, grads, state.opt,
+                                  sched(state.step), grad_clip=grad_clip)
+        return TrainState(params, opt, state.step + 1), (loss, metrics)
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+    return serve_step
+
+
+def make_vfl_zoo_step(model: Model, vfl: VFLConfig):
+    """The paper's AsyREVEL iteration wrapping this architecture as F_0."""
+    vm = TransformerVFLModel(model, vfl)
+
+    def init(key):
+        return asyrevel.init_state(vm, vfl, key)
+
+    def step(state, batch):
+        return asyrevel.asyrevel_step(vm, vfl, state, batch)
+
+    return vm, init, step

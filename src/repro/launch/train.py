@@ -1,0 +1,121 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --reduced --steps 200 --mode lm
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --reduced --steps 500 --mode vfl-zoo --parties 4
+
+Modes:
+  lm       first-order Adam LM training (substrate baseline)
+  vfl-zoo  the paper's AsyREVEL black-box VFL training of the same arch
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import INPUT_SHAPES, VFLConfig, get_config
+from repro.data.synthetic import make_lm_dataset
+from repro.launch import steps as step_lib
+from repro.models import build_model
+from repro.optim.schedules import make_schedule
+from repro.utils.logging import MetricLogger
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--mode", default="lm", choices=["lm", "vfl-zoo"])
+    p.add_argument("--reduced", action="store_true",
+                   help="2-layer smoke-size variant (CPU-friendly)")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch-size", type=int, default=8)
+    p.add_argument("--seq-len", type=int, default=64)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--schedule", default=None,
+                   help="constant|cosine|wsd (default: arch-appropriate)")
+    p.add_argument("--parties", type=int, default=4)
+    p.add_argument("--mu", type=float, default=1e-3)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--log-every", type=int, default=10)
+    return p.parse_args(argv)
+
+
+def make_batch_arrays(cfg, n, seq_len, seed):
+    toks, targets = make_lm_dataset(n, seq_len, cfg.vocab_size, seed)
+    data = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(targets)}
+    if cfg.enc_dec:
+        rng = np.random.default_rng(seed + 1)
+        data["frames"] = jnp.asarray(rng.normal(
+            size=(n, cfg.encoder_frames, cfg.d_model)).astype(np.float32))
+    if cfg.frontend == "vq_stub":
+        rng = np.random.default_rng(seed + 2)
+        data["modality_mask"] = jnp.asarray(
+            (rng.random((n, seq_len)) < 0.3).astype(np.int32))
+    return data
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+    log = MetricLogger(f"train:{args.arch}:{args.mode}")
+    key = jax.random.key(args.seed)
+    n = max(64, args.batch_size * 8)
+    data = make_batch_arrays(cfg, n, args.seq_len, args.seed)
+
+    if args.mode == "lm":
+        sched_name = args.schedule or (
+            "wsd" if args.arch.startswith("minicpm") else "cosine")
+        sched = make_schedule(sched_name, args.lr, args.steps,
+                              warmup=max(1, args.steps // 20))
+        state = step_lib.make_train_state(model, key)
+        train_step = jax.jit(step_lib.make_train_step(model, sched))
+        rng = np.random.default_rng(args.seed)
+        t0 = time.perf_counter()
+        for s in range(args.steps):
+            idx = rng.integers(0, n, args.batch_size)
+            batch = jax.tree.map(lambda a: a[idx], data)
+            state, (loss, metrics) = train_step(state, batch)
+            if s % args.log_every == 0 or s == args.steps - 1:
+                log.log(s, loss=loss, ce=metrics["ce"], aux=metrics["aux"],
+                        lr=sched(s))
+        dt = time.perf_counter() - t0
+        log.log(args.steps, done=1, steps_per_s=args.steps / dt)
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, args.steps, state.params,
+                            {"arch": args.arch, "mode": "lm"})
+        return float(loss)
+
+    # --- vfl-zoo: the paper's technique wrapping this architecture -------
+    assert cfg.d_model % args.parties == 0, \
+        f"--parties must divide d_model={cfg.d_model}"
+    vfl = VFLConfig(num_parties=args.parties, mu=args.mu,
+                    lr_party=args.lr, lr_server=args.lr / args.parties)
+    vm, init, step = step_lib.make_vfl_zoo_step(model, vfl)
+    state = init(key)
+    zoo_step = jax.jit(step)
+    rng = np.random.default_rng(args.seed)
+    losses = []
+    for s in range(args.steps):
+        idx = rng.integers(0, n, args.batch_size)
+        batch = jax.tree.map(lambda a: a[idx], data)
+        state, h = zoo_step(state, batch)
+        losses.append(float(h))
+        if s % args.log_every == 0 or s == args.steps - 1:
+            log.log(s, h=h)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps,
+                        {"w0": state.w0, "parties": state.parties},
+                        {"arch": args.arch, "mode": "vfl-zoo"})
+    return losses[-1]
+
+
+if __name__ == "__main__":
+    main()

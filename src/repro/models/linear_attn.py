@@ -1,0 +1,130 @@
+"""Chunked linear attention with per-channel data-dependent decay.
+
+One engine serves both assigned recurrent families:
+  * rwkv6 (Finch): per-key-channel decay w_t, bonus ``u`` on the current
+    token, output uses S_{t-1}  -> ``bonus_u`` path.
+  * mamba2-style heads (hymba): scalar-per-head decay a_t broadcast over the
+    key dim, output uses S_t     -> ``include_current=True`` path.
+
+Recurrence (per batch b, head h; key dim K, value dim V):
+    S_t = exp(log_w_t) (*)_K  S_{t-1}  +  k_t (x) v_t
+    o_t = r_t . (S_{t-1} + (u (*) k_t) (x) v_t)      [bonus variant]
+    o_t = r_t . S_t                                   [include_current variant]
+
+Chunked form (chunk C, cumulative log-decay L_j = sum_{s<=j} log_w_s):
+  * inter-chunk:  o_j += (r_j (*) exp(L_{j-1})) . S_0        exp<=1, stable
+  * intra-chunk:  A[j,i] = sum_k r_j[k] k_i[k] exp(L_{j-1}[k]-L_i[k]), i<j
+                  (the pairwise exponent is <=0 for i<j -> stable; it is
+                  materialized per chunk only, inside the scan)
+  * state:        S_C = exp(L_C) (*) S_0 + sum_i (k_i (*) exp(L_C-L_i)) (x) v_i
+All exponents are differences of cumulative logs taken in the stable
+direction — no clamping of the decay dynamics is needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def recurrent_linear_attention(r, k, v, log_w, *, bonus_u=None, state0=None,
+                               include_current=False):
+    """Naive O(T) sequential oracle (also the decode path for T=1 loops).
+
+    r,k,log_w: (B,T,H,K); v: (B,T,H,V). Returns (out (B,T,H,V), S (B,H,K,V)).
+    """
+    B, T, H, K = k.shape
+    V = v.shape[-1]
+    log_w = jnp.broadcast_to(log_w, (B, T, H, K))
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp          # (B,H,K)/(B,H,V)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,K,V)
+        if include_current:
+            S_new = jnp.exp(lw_t)[..., None] * S + kv
+            o = jnp.einsum("bhk,bhkv->bhv", r_t, S_new)
+        else:
+            eff = S + (bonus_u[None, ..., None] * kv if bonus_u is not None
+                       else 0.0)
+            o = jnp.einsum("bhk,bhkv->bhv", r_t, eff)
+            S_new = jnp.exp(lw_t)[..., None] * S + kv
+        return S_new, o
+
+    xs = (r.swapaxes(0, 1).astype(jnp.float32),
+          k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32),
+          log_w.swapaxes(0, 1).astype(jnp.float32))
+    S, outs = jax.lax.scan(step, state0, xs)
+    return outs.swapaxes(0, 1).astype(v.dtype), S
+
+
+def chunked_linear_attention(r, k, v, log_w, *, bonus_u=None, state0=None,
+                             include_current=False, chunk: int = 64):
+    """Chunk-parallel form; O(T/C) scan of dense MXU-friendly blocks.
+
+    Same signature/semantics as :func:`recurrent_linear_attention`.
+    """
+    B, T, H, K = k.shape
+    V = v.shape[-1]
+    log_w = jnp.broadcast_to(log_w, (B, T, H, K)).astype(jnp.float32)
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk //= 2
+    n = T // chunk
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    rf = r.astype(jnp.float32).reshape(B, n, chunk, H, K).swapaxes(0, 1)
+    kf = k.astype(jnp.float32).reshape(B, n, chunk, H, K).swapaxes(0, 1)
+    vf = v.astype(jnp.float32).reshape(B, n, chunk, H, V).swapaxes(0, 1)
+    lw = log_w.reshape(B, n, chunk, H, K).swapaxes(0, 1)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool),
+                   k=0 if include_current else -1)
+
+    def body(S0, blk):
+        rb, kb, vb, lwb = blk                       # (B,C,H,K) etc.
+        L = jnp.cumsum(lwb, axis=1)                 # (B,C,H,K) cumulative
+        # exponent used on the query side: L_{j-1} (bonus) or L_j (current)
+        Lq = L if include_current else L - lwb
+        # ---- inter-chunk: contribution of the carried state ----
+        r_dec = rb * jnp.exp(Lq)                    # stable: exp(<=0)
+        o = jnp.einsum("bchk,bhkv->bchv", r_dec, S0)
+        # ---- intra-chunk: pairwise-stable attention matrix ----
+        diff = Lq[:, :, None] - L[:, None, :]       # (B,C,C,H,K)
+        A = jnp.einsum("bjhk,bihk,bjihk->bjih", rb, kb,
+                       jnp.exp(jnp.where(tri[None, :, :, None, None],
+                                         diff, -jnp.inf)))
+        o = o + jnp.einsum("bjih,bihv->bjhv", A, vb)
+        if bonus_u is not None and not include_current:
+            diag = jnp.einsum("bchk,hk,bchk->bch", rb, bonus_u, kb)
+            o = o + diag[..., None] * vb
+        # ---- carry state across the chunk boundary ----
+        k_dec = kb * jnp.exp(L[:, -1:, :, :] - L)   # exp(<=0), stable
+        S_new = jnp.exp(L[:, -1])[..., None] * S0 + \
+            jnp.einsum("bchk,bchv->bhkv", k_dec, vb)
+        return S_new, o
+
+    S, outs = jax.lax.scan(body, state0, (rf, kf, vf, lw))
+    out = outs.swapaxes(0, 1).reshape(B, T, H, V)
+    return out.astype(v.dtype), S
+
+
+def linear_attention_decode(r, k, v, log_w, S, *, bonus_u=None,
+                            include_current=False):
+    """Single-token step. r,k,log_w: (B,H,K); v: (B,H,V); S: (B,H,K,V)."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    log_w = jnp.broadcast_to(log_w.astype(jnp.float32), k.shape)
+    kv = k[..., :, None] * v32[..., None, :]
+    if include_current:
+        S_new = jnp.exp(log_w)[..., None] * S + kv
+        o = jnp.einsum("bhk,bhkv->bhv", r, S_new)
+    else:
+        eff = S + (bonus_u[None, ..., None] * kv if bonus_u is not None
+                   else 0.0)
+        o = jnp.einsum("bhk,bhkv->bhv", r, eff)
+        S_new = jnp.exp(log_w)[..., None] * S + kv
+    return o.astype(v.dtype), S_new

@@ -1,0 +1,118 @@
+"""Mamba-2-style selective SSM heads (used by hymba's parallel attn+mamba
+layers). Scalar-per-head data-dependent decay -> shares the chunked
+linear-attention engine (DESIGN.md §4 hardware-adaptation note).
+
+    x -> in_proj -> (xz: d_inner, gate z: d_inner)
+    x_c = causal depthwise conv(k=4)(xz), silu
+    dt  = softplus(dt_proj(x) + dt_bias)     per head
+    a_t = exp(-dt * exp(A_log))              per head (scalar decay)
+    B_t, C_t : (B,T,N)  shared across heads (mamba2)
+    h_t = a_t h_{t-1} + (dt*x_t) (x) B_t ;  y = C_t . h_t + D * x
+    out = out_proj(y * silu(z))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.linear_attn import (chunked_linear_attention,
+                                      linear_attention_decode)
+
+CONV_K = 4
+HEAD_P = 64  # value head dim
+
+
+def mamba_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    N = cfg.ssm.state_size
+    H = di // HEAD_P
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, di), jnp.float32)
+                   * 0.1).astype(dtype),
+        "bc_proj": dense_init(ks[2], d, 2 * N, dtype),
+        "dt_proj": dense_init(ks[3], d, H, dtype, scale=0.01),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, x_prev=None):
+    """Depthwise causal conv. x: (B,T,di); w: (K,di); x_prev: (B,K-1,di)."""
+    B, T, di = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, CONV_K - 1, di), x.dtype)
+    xp = jnp.concatenate([x_prev.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + T, :] * w[i] for i in range(CONV_K))
+    return out, xp[:, -(CONV_K - 1):, :]
+
+
+def mamba_apply(p, cfg: ModelConfig, x, state=None):
+    """x: (B,T,d). state: {"h": (B,H,N,P), "conv": (B,K-1,di)} or None."""
+    B, T, d = x.shape
+    di = cfg.ssm.expand * d
+    N = cfg.ssm.state_size
+    H = di // HEAD_P
+    xz = jnp.dot(x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_prev = state["conv"] if state is not None else None
+    xc, conv_state = _causal_conv(xi, p["conv_w"], conv_prev)
+    xc = jax.nn.silu(xc)
+    bc = jnp.dot(x, p["bc_proj"])
+    Bt, Ct = jnp.split(bc, 2, axis=-1)                       # (B,T,N)
+    dt = jax.nn.softplus(jnp.dot(x, p["dt_proj"]) + p["dt_bias"])  # (B,T,H)
+    log_a = (-dt.astype(jnp.float32)
+             * jnp.exp(p["A_log"]))                          # (B,T,H) <= 0
+    xh = xc.reshape(B, T, H, HEAD_P)
+    v = xh * dt[..., None]                                    # dt-scaled input
+    k = jnp.broadcast_to(Bt[:, :, None, :], (B, T, H, N))
+    r = jnp.broadcast_to(Ct[:, :, None, :], (B, T, H, N))
+    h0 = state["h"] if state is not None else None
+    y, h = chunked_linear_attention(r, k, v, log_a[..., None],
+                                    state0=h0, include_current=True,
+                                    chunk=cfg.ssm.chunk_size)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, T, di) * jax.nn.silu(z)
+    return jnp.dot(y, p["out_proj"]), {"h": h, "conv": conv_state}
+
+
+def mamba_decode(p, cfg: ModelConfig, x, state):
+    """x: (B,1,d)."""
+    B, _, d = x.shape
+    di = cfg.ssm.expand * d
+    N = cfg.ssm.state_size
+    H = di // HEAD_P
+    xz = jnp.dot(x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, p["conv_w"], state["conv"])
+    xc = jax.nn.silu(xc)[:, 0]
+    bc = jnp.dot(x[:, 0], p["bc_proj"])
+    Bt, Ct = jnp.split(bc, 2, axis=-1)                        # (B,N)
+    dt = jax.nn.softplus(jnp.dot(x[:, 0], p["dt_proj"]) + p["dt_bias"])
+    log_a = -dt.astype(jnp.float32) * jnp.exp(p["A_log"])     # (B,H)
+    xh = xc.reshape(B, H, HEAD_P)
+    v = xh * dt[..., None]
+    k = jnp.broadcast_to(Bt[:, None, :], (B, H, N))
+    r = jnp.broadcast_to(Ct[:, None, :], (B, H, N))
+    y, h = linear_attention_decode(r, k, v, log_a[..., None], state["h"],
+                                   include_current=True)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di) * jax.nn.silu(z)
+    return jnp.dot(y, p["out_proj"]), {
+        "h": h, "conv": conv_state.astype(jnp.float32)}
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int):
+    di = cfg.ssm.expand * cfg.d_model
+    N = cfg.ssm.state_size
+    H = di // HEAD_P
+    return {
+        "h": jnp.zeros((batch, H, N, HEAD_P), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, di), jnp.float32),
+    }

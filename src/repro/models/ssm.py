@@ -1,0 +1,136 @@
+"""RWKV-6 "Finch" blocks [arXiv:2404.05892] — attention-free, with
+data-dependent decay (the paper family's signature feature).
+
+Time-mix: token-shift lerp into r/k/v/g/w branches; the decay branch w gets a
+data-dependent LoRA (w = exp(-exp(w0 + tanh(x A) B))) — per-channel decay fed
+to the shared chunked linear-attention engine with the bonus-u current-token
+term. Channel-mix: squared-ReLU MLP with token shift.
+
+Simplification vs the reference CUDA impl (DESIGN.md §4): the data-dependent
+ddlerp token-shift LoRAs on r/k/v/g are replaced with static learned mixes;
+the decay LoRA (the headline data dependence) is kept exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.linear_attn import (chunked_linear_attention,
+                                      linear_attention_decode)
+
+
+def rwkv_time_mix_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    K = cfg.ssm.state_size          # head_size
+    H = d // K
+    rank = cfg.ssm.decay_lora_rank
+    ks = jax.random.split(key, 8)
+    return {
+        "mix": jnp.full((5, d), 0.5, dtype),          # r,k,v,g,w static lerps
+        "w0": jnp.full((d,), -0.6, dtype),            # base log-log decay
+        "w_lora_a": dense_init(ks[0], d, rank, dtype, scale=0.01),
+        "w_lora_b": dense_init(ks[1], rank, d, dtype, scale=0.01),
+        "wr": dense_init(ks[2], d, d, dtype),
+        "wk": dense_init(ks[3], d, d, dtype),
+        "wv": dense_init(ks[4], d, d, dtype),
+        "wg": dense_init(ks[5], d, d, dtype),
+        "wo": dense_init(ks[6], d, d, dtype),
+        "u": (jax.random.normal(ks[7], (H, K), jnp.float32) * 0.1
+              ).astype(dtype),                        # current-token bonus
+        "ln_gamma": jnp.ones((d,), dtype),            # per-head group norm
+    }
+
+
+def _token_shift(x, x_prev_last):
+    """x_{t-1} with x_prev_last (B,d) filling position 0."""
+    return jnp.concatenate([x_prev_last.astype(x.dtype)[:, None, :],
+                            x[:, :-1, :]], axis=1)
+
+
+def _decay_log_w(p, xw):
+    """Data-dependent per-channel log decay, in (-inf, 0)."""
+    lora = jnp.tanh(jnp.dot(xw, p["w_lora_a"])) @ p["w_lora_b"]
+    return -jnp.exp((p["w0"] + lora).astype(jnp.float32))
+
+
+def rwkv_time_mix_apply(p, cfg: ModelConfig, x, state=None):
+    """x: (B,T,d). state: None (zeros) or {"S": (B,H,K,K), "x_prev": (B,d)}.
+
+    Returns (out, new_state).
+    """
+    B, T, d = x.shape
+    K = cfg.ssm.state_size
+    H = d // K
+    x_prev = state["x_prev"] if state is not None else jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, x_prev)
+    mix = p["mix"]
+    xr, xk, xv, xg, xw = (x + (xs - x) * mix[i] for i in range(5))
+    r = jnp.dot(xr, p["wr"]).reshape(B, T, H, K)
+    k = jnp.dot(xk, p["wk"]).reshape(B, T, H, K)
+    v = jnp.dot(xv, p["wv"]).reshape(B, T, H, K)
+    g = jax.nn.silu(jnp.dot(xg, p["wg"]))
+    log_w = _decay_log_w(p, xw).reshape(B, T, H, K)
+    S0 = state["S"] if state is not None else None
+    out, S = chunked_linear_attention(
+        r, k, v, log_w, bonus_u=p["u"].astype(jnp.float32), state0=S0,
+        chunk=cfg.ssm.chunk_size)
+    out = rms_norm(out, 1.0, cfg.norm_eps)            # per-head norm
+    out = out.reshape(B, T, d) * p["ln_gamma"]
+    out = jnp.dot(out * g, p["wo"])
+    return out, {"S": S, "x_prev": x[:, -1, :].astype(jnp.float32)}
+
+
+def rwkv_time_mix_decode(p, cfg: ModelConfig, x, state):
+    """x: (B,1,d); state as above. Single-token recurrence."""
+    B, _, d = x.shape
+    K = cfg.ssm.state_size
+    H = d // K
+    xs = state["x_prev"].astype(x.dtype)[:, None, :]
+    mix = p["mix"]
+    xr, xk, xv, xg, xw = (x + (xs - x) * mix[i] for i in range(5))
+    r = jnp.dot(xr, p["wr"]).reshape(B, H, K)
+    k = jnp.dot(xk, p["wk"]).reshape(B, H, K)
+    v = jnp.dot(xv, p["wv"]).reshape(B, H, K)
+    g = jax.nn.silu(jnp.dot(xg, p["wg"]))
+    log_w = _decay_log_w(p, xw).reshape(B, H, K)
+    o, S = linear_attention_decode(r, k, v, log_w, state["S"],
+                                   bonus_u=p["u"].astype(jnp.float32))
+    o = rms_norm(o, 1.0, cfg.norm_eps).reshape(B, 1, d) * p["ln_gamma"]
+    out = jnp.dot(o * g, p["wo"])
+    return out, {"S": S, "x_prev": x[:, 0, :].astype(jnp.float32)}
+
+
+def rwkv_channel_mix_init(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix": jnp.full((2, d), 0.5, dtype),          # k, r lerps
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def rwkv_channel_mix_apply(p, x, x_prev=None):
+    B, T, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * p["mix"][0]
+    xr = x + (xs - x) * p["mix"][1]
+    k = jnp.square(jax.nn.relu(jnp.dot(xk, p["wk"])))
+    out = jax.nn.sigmoid(jnp.dot(xr, p["wr"])) * jnp.dot(k, p["wv"])
+    return out, x[:, -1, :]
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    K = cfg.ssm.state_size
+    H = d // K
+    return {
+        "S": jnp.zeros((batch, H, K, K), jnp.float32),
+        "x_prev": jnp.zeros((batch, d), jnp.float32),
+        "x_prev_ffn": jnp.zeros((batch, d), jnp.float32),
+    }

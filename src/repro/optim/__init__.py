@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adam_init, adam_update, sgd_update,  # noqa
+                                    make_optimizer)
+from repro.optim.schedules import (constant, cosine, wsd, make_schedule)  # noqa
+from repro.optim.zo_sgd import zo_sgd_step  # noqa

@@ -1,0 +1,65 @@
+"""First-order optimizers in pure JAX (pytree-native). Adam keeps fp32
+moments regardless of param dtype (mixed-precision discipline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.trees import global_norm
+
+
+def sgd_update(params, grads, lr, momentum_state=None, momentum=0.0):
+    if momentum and momentum_state is not None:
+        momentum_state = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            momentum_state, grads)
+        upd = momentum_state
+    else:
+        upd = grads
+        momentum_state = momentum_state
+    params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype),
+        params, upd)
+    return params, momentum_state
+
+
+def adam_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.0, grad_clip=0.0):
+    if grad_clip:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_
+                     + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                     state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    params = jax.tree.map(upd, params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def make_optimizer(name: str):
+    """Returns (init_fn, update_fn(params, grads, state, lr) -> (p, s))."""
+    if name == "adam":
+        return adam_init, adam_update
+    if name == "sgd":
+        return (lambda p: None), (
+            lambda params, grads, state, lr: sgd_update(params, grads, lr))
+    raise ValueError(f"unknown optimizer {name}")

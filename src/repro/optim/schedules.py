@@ -1,0 +1,53 @@
+"""LR schedules, including WSD (warmup-stable-decay) — the minicpm-2b
+assignment's signature schedule [arXiv:2404.06395]."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(base_lr: float, warmup: int = 0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(1.0, (step + 1) / max(warmup, 1)) if warmup else 1.0
+        return base_lr * w
+    return f
+
+
+def cosine(base_lr: float, total_steps: int, warmup: int = 0,
+           final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(
+            jnp.pi * prog))
+        return base_lr * w * cos
+    return f
+
+
+def wsd(base_lr: float, total_steps: int, warmup: int = 0,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> Stable (constant) -> Decay (exponential tail over the last
+    decay_frac of training), per MiniCPM."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        in_decay = step > decay_start
+        prog = jnp.clip((step - decay_start)
+                        / max(total_steps - decay_start, 1), 0, 1)
+        decay = jnp.exp(jnp.log(final_frac) * prog)
+        return base_lr * w * jnp.where(in_decay, decay, 1.0)
+    return f
+
+
+def make_schedule(name: str, base_lr: float, total_steps: int,
+                  warmup: int = 0):
+    if name == "constant":
+        return constant(base_lr, warmup)
+    if name == "cosine":
+        return cosine(base_lr, total_steps, warmup)
+    if name == "wsd":
+        return wsd(base_lr, total_steps, warmup)
+    raise ValueError(f"unknown schedule {name}")

@@ -1,0 +1,115 @@
+"""Batched serving engine — continuous batching over the Model decode API.
+
+A fixed pool of B slots shares ONE jit-compiled decode step (the same
+`serve_step` the decode_32k / long_500k dry-runs lower). Each slot carries
+its own position counter (per-slot positions thread through RoPE, the KV
+write index and the attention length mask), so requests of different
+lengths run concurrently: when a request finishes, its slot is re-admitted
+from the queue on the next step — no pipeline flush, no padding to the
+longest request.
+
+Prefill is teacher-forced through the decode path slot-wise (correct for
+every architecture family, including SSM state builds), with the slot's
+emitted logits ignored until its prompt is consumed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (P,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    out_tokens: list = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if self.out_tokens and self.eos_id is not None \
+                and self.out_tokens[-1] == self.eos_id:
+            return True
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 256, frames=None, greedy: bool = True,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.key = jax.random.key(seed)
+        self.cache = model.init_cache(params, slots, max_len, frames=frames)
+        self._step = jax.jit(model.decode_step)
+        self.queue: list[Request] = []
+        self.active: list[Optional[Request]] = [None] * slots
+        self._cursor = np.zeros(slots, np.int64)     # next prompt index
+        self._pos = np.zeros(slots, np.int64)        # absolute position
+        self.steps = 0
+        self.completed: list[Request] = []
+
+    # ------------------------------------------------------------- api ---
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        while (self.queue or any(self.active)) and self.steps < max_steps:
+            self.step()
+        return self.completed
+
+    # ------------------------------------------------------------ inner ---
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                self._cursor[s] = 0
+                self._pos[s] = 0
+                # fresh state for this slot: zero the slot's cache entries
+                self.cache = jax.tree.map(
+                    lambda a: a.at[:, s].set(jnp.zeros_like(a[:, s]))
+                    if a.ndim >= 2 else a, self.cache)
+
+    def step(self):
+        self._admit()
+        tok = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self._cursor[s] < len(req.prompt):        # prefill phase
+                tok[s, 0] = req.prompt[self._cursor[s]]
+            elif req.out_tokens:                          # decode phase
+                tok[s, 0] = req.out_tokens[-1]
+        pos = jnp.asarray(self._pos, jnp.int32)
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(tok), pos)
+        if self.greedy:
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        else:
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(jax.random.categorical(sub, logits[:, 0]))
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self._pos[s] += 1
+            if self._cursor[s] < len(req.prompt):
+                self._cursor[s] += 1
+                if self._cursor[s] == len(req.prompt):
+                    req.out_tokens.append(int(nxt[s]))   # first generated
+            else:
+                req.out_tokens.append(int(nxt[s]))
+            if req.done or self._pos[s] >= self.max_len:
+                self.completed.append(req)
+                self.active[s] = None
+        self.steps += 1

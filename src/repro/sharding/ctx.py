@@ -1,0 +1,76 @@
+"""Activation-sharding constraints via an ambient mesh context.
+
+Model code is mesh-agnostic; it calls ``constrain(x, ("batch", None, None))``
+with LOGICAL axis names. When a mesh is active (set by the dry-run / real
+launchers around tracing), the logical names resolve to mesh axes and a
+``with_sharding_constraint`` is inserted; with no mesh it is a no-op, so
+smoke tests and CPU runs are untouched.
+
+Logical axes:
+  batch  -> ('pod','data') (whichever exist)   — data parallel
+  model  -> 'model'                            — tensor/expert parallel
+  None   -> replicated dim
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = contextvars.ContextVar("repro_activation_mesh", default=None)
+_BATCH_AXES = contextvars.ContextVar("repro_batch_axes", default=None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh, batch_axes=None):
+    """batch_axes: mesh axes the logical 'batch' dim shards over. Default
+    ('pod','data'); zero3 passes ('pod','data','model') — in that case the
+    logical 'model' axis resolves to nothing (no tensor parallelism)."""
+    t1 = _MESH.set(mesh)
+    t2 = _BATCH_AXES.set(batch_axes)
+    try:
+        yield
+    finally:
+        _MESH.reset(t1)
+        _BATCH_AXES.reset(t2)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def _resolve(name, mesh, dim_size):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = _BATCH_AXES.get() or ("pod", "data")
+    if name is None:
+        return None
+    if name == "batch":
+        axes = tuple(a for a in batch_axes if a in axis_sizes)
+        # progressively drop trailing axes until divisible
+        while axes:
+            total = 1
+            for a in axes:
+                total *= axis_sizes[a]
+            if dim_size % total == 0:
+                return axes if len(axes) > 1 else axes[0]
+            axes = axes[:-1]
+        return None
+    if name in (_BATCH_AXES.get() or ()):
+        return None                      # axis consumed by data parallelism
+    if name in axis_sizes:
+        return name if dim_size % axis_sizes[name] == 0 else None
+    return None
+
+
+def constrain(x, logical_spec: tuple):
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    entries = [_resolve(n, mesh, d)
+               for n, d in zip(logical_spec, x.shape)]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

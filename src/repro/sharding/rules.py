@@ -1,0 +1,212 @@
+"""Logical sharding rules: param/batch/cache pytrees -> PartitionSpec trees.
+
+Strategy (MaxText-style 2D sharding on a ('data','model') mesh, optional
+leading 'pod' axis for multi-pod):
+  * batch dims shard over ('pod','data') — pure data parallel across pods;
+  * weight matrices are FSDP-sharded over 'data' on their input dim and
+    tensor-sharded over 'model' on their output dim (or transposed for
+    down/out projections so the contraction stays local);
+  * MoE expert stacks shard the expert dim over 'model' (expert parallelism);
+  * vocab dims shard over 'model';
+  * every rule is divisibility-guarded: if a dim doesn't divide by the mesh
+    axis it stays replicated (e.g. kv_heads=8 on model=16).
+
+Stacked per-layer params carry a leading L dim that is never sharded.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# param-name -> (dim roles); roles: 'fsdp' (shard over data), 'tensor'
+# (shard over model), 'expert', 'vocab', None (replicate)
+_MATRIX_RULES = {
+    # attention
+    "wq": ("fsdp", "tensor"), "wk": ("fsdp", "tensor"),
+    "wv": ("fsdp", "tensor"), "wo": ("tensor", "fsdp"),
+    # mlp
+    "w_gate": ("fsdp", "tensor"), "w_up": ("fsdp", "tensor"),
+    "w_down": ("tensor", "fsdp"),
+    # rwkv
+    "wr": ("fsdp", "tensor"), "wg": ("fsdp", "tensor"),
+    "w_lora_a": ("fsdp", None), "w_lora_b": (None, "fsdp"),
+    # mamba
+    "in_proj": ("fsdp", "tensor"), "out_proj": ("tensor", "fsdp"),
+    "bc_proj": ("fsdp", None), "dt_proj": ("fsdp", None),
+    "conv_w": (None, "tensor"),
+    # routing / embeddings
+    "router": ("fsdp", None),
+    "embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "modality_embed": (None, None),
+}
+_EXPERT_PARAMS = {"w_gate", "w_up", "w_down"}
+
+
+def _axes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _maybe(axis_name, dim_size, axis_sizes):
+    if axis_name is None:
+        return None
+    size = axis_sizes.get(axis_name, 1)
+    return axis_name if size > 1 and dim_size % size == 0 else None
+
+
+def _role_to_axis(role):
+    return {"fsdp": "data", "tensor": "model", "vocab": "model",
+            "expert": "model", None: None}[role]
+
+
+def spec_for_param(path, shape, axis_sizes, stacked_layers: bool) -> P:
+    name = None
+    in_moe = in_cmix = False
+    for k in path:
+        key = getattr(k, "key", getattr(k, "name", None))
+        if key == "moe":
+            in_moe = True
+        if key == "cmix":
+            in_cmix = True
+        if key is not None:
+            name = key
+    if in_cmix and name == "wv":      # rwkv channel-mix down-projection
+        name = "w_down"
+    rank = len(shape)
+    # leading layer-stack dim is unsharded
+    lead = 1 if (stacked_layers and rank >= 2) else 0
+    core_shape = shape[lead:]
+    roles = _MATRIX_RULES.get(name)
+    if in_moe and name in _EXPERT_PARAMS and len(core_shape) == 3:
+        # (E, d, f) gate/up -> expert over model, fsdp over d_model
+        # (E, f, d) down    -> expert over model, fsdp over d_model
+        roles = ("expert", "fsdp", None) if name in ("w_gate", "w_up") \
+            else ("expert", None, "fsdp")
+    if roles is None or len(roles) != len(core_shape):
+        return P()                                  # replicate
+    entries = [None] * lead + [
+        _maybe(_role_to_axis(r), d, axis_sizes)
+        for r, d in zip(roles, core_shape)
+    ]
+    # trim trailing Nones
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_pspecs(params_tree, mesh, stacked_layers: bool = True,
+                 strategy: str = "2d"):
+    """PartitionSpec tree matching a params (or ShapeDtypeStruct) pytree.
+
+    strategy '2d': FSDP over 'data' + tensor parallel over 'model'
+    (Megatron-style, the baseline). 'zero3': NO tensor parallelism — every
+    param is flat-sharded over ('data','model') combined (ZeRO-3); weights
+    are all-gathered per layer at use, activations stay purely
+    batch-sharded. Wins when params/layer << activation all-reduce bytes
+    (small models on big meshes — see EXPERIMENTS.md §Perf).
+    """
+    axis_sizes = _axes(mesh)
+
+    if strategy == "zero3":
+        combo = tuple(a for a in ("data", "model") if a in axis_sizes)
+        total = int(np.prod([axis_sizes[a] for a in combo]))
+
+        def z(path, leaf):
+            in_layers = any(getattr(k, "key", None) in ("layers",)
+                            for k in path)
+            lead = 1 if (in_layers and leaf.ndim >= 2) else 0
+            shape = leaf.shape[lead:]
+            if not shape:
+                return P()
+            # shard the largest divisible dim over the combined axes
+            order = sorted(range(len(shape)), key=lambda i: -shape[i])
+            for axes_try in (combo, ("data",), ("model",)):
+                t = int(np.prod([axis_sizes[a] for a in axes_try]))
+                for i in order:
+                    if t > 1 and shape[i] % t == 0:
+                        entries = [None] * (lead + len(shape))
+                        entries[lead + i] = (axes_try if len(axes_try) > 1
+                                             else axes_try[0])
+                        while entries and entries[-1] is None:
+                            entries.pop()
+                        return P(*entries)
+            return P()
+
+        return jax.tree_util.tree_map_with_path(z, params_tree)
+
+    def f(path, leaf):
+        in_layers = any(getattr(k, "key", None) in ("layers",)
+                        for k in path)
+        return spec_for_param(path, leaf.shape, axis_sizes,
+                              stacked_layers and in_layers)
+
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+def batch_pspecs(batch_tree, mesh, batch_axes=("pod", "data")):
+    """Shard every leading batch dim over `batch_axes` when divisible."""
+    axis_sizes = _axes(mesh)
+    data_axes = tuple(a for a in batch_axes if a in axis_sizes)
+    dp = int(np.prod([axis_sizes[a] for a in data_axes])) if data_axes else 1
+
+    def f(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % dp == 0 and dp > 1:
+            return P(data_axes if len(data_axes) > 1 else data_axes[0])
+        return P()
+
+    return jax.tree.map(f, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh):
+    """KV caches / SSM states.
+
+    (B, S, KV, hd) caches: batch over ('pod','data') when divisible, else the
+    sequence dim shards over 'model' (sequence-parallel decode — flash-
+    decoding style; GSPMD inserts the partial-softmax reductions).
+    SSM states (B,H,K,V): batch over data, heads over 'model' when divisible.
+    """
+    axis_sizes = _axes(mesh)
+    data_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    dp = int(np.prod([axis_sizes[a] for a in data_axes])) if data_axes else 1
+    mp = axis_sizes.get("model", 1)
+    dspec = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes
+                                                  else None)
+
+    def f(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        shape = leaf.shape
+        # stacked layer caches have a leading L dim
+        lead = 1
+        core = shape[lead:]
+        if not core:
+            return P()
+        specs = [None] * len(shape)
+        b_ok = dp > 1 and core[0] % dp == 0
+        if b_ok:
+            specs[lead] = dspec
+        if ("k" in names or "v" in names) and len(core) == 4:
+            # (B, S, KV, hd): shard seq over model if batch didn't shard
+            if not b_ok and mp > 1 and core[1] % mp == 0:
+                specs[lead + 1] = "model"
+            elif mp > 1 and core[2] % mp == 0:
+                specs[lead + 2] = "model"         # kv heads over model
+            elif mp > 1 and core[1] % mp == 0:
+                specs[lead + 1] = "model"         # seq over model
+        elif ("S" in names or "h" in names) and len(core) == 4:
+            if mp > 1 and core[1] % mp == 0:
+                specs[lead + 1] = "model"         # heads over model
+        while specs and specs[-1] is None:
+            specs.pop()
+        return P(*specs)
+
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def shard_tree(tree, mesh, specs):
+    """Device-put a pytree according to a spec tree (for real runs)."""
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)

@@ -1,0 +1,1 @@
+from repro.utils import trees, prng, logging  # noqa: F401

@@ -1,0 +1,39 @@
+"""PRNG plumbing: named key folding so every module gets a stable stream."""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+
+
+def fold_name(key, name: str):
+    """Deterministically fold a string into a PRNG key."""
+    h = int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def key_iter(key):
+    """Infinite iterator of fresh subkeys."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def sample_direction(key, shape, dist: str, dtype=jnp.float32):
+    """Random direction u for the two-point estimator.
+
+    dist='gaussian': u ~ N(0, I)           (AsyREVEL-Gau)
+    dist='uniform' : u ~ Unif(S^{d-1})·√d  (AsyREVEL-Uni; the √d keeps E||u||²=d,
+                     matching the Gaussian normalization so Eq.(15)'s d_m/μ_m
+                     prefactor is shared — the paper's two theorems differ only
+                     in the d_* constant.)
+    """
+    if dist == "gaussian":
+        return jax.random.normal(key, shape, dtype)
+    elif dist == "uniform":
+        g = jax.random.normal(key, shape, jnp.float32)
+        d = g.size
+        u = g / (jnp.linalg.norm(g.reshape(-1)) + 1e-12) * jnp.sqrt(float(d))
+        return u.astype(dtype)
+    raise ValueError(f"unknown direction distribution: {dist}")

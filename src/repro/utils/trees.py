@@ -1,0 +1,67 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (or ShapeDtypeStructs)."""
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x, y):
+    """y + a * x, elementwise over pytrees."""
+    return jax.tree.map(lambda xi, yi: yi + a * xi, x, y)
+
+
+def tree_dot(a, b):
+    """Inner product over two pytrees."""
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) *
+                                               y.astype(jnp.float32)), a, b)
+    return sum(jax.tree.leaves(leaves))
+
+
+def tree_norm(tree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def global_norm(tree):
+    return tree_norm(tree)
+
+
+def tree_any_nan(tree):
+    flags = [jnp.any(~jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+             if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not flags:
+        return jnp.array(False)
+    return jnp.any(jnp.stack(flags))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

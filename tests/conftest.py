@@ -1,0 +1,32 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — the dry-run
+# is the ONLY place that sees 512 devices; tests run on the real 1 device.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+class FakeMesh:
+    """Duck-typed mesh for sharding-rule tests (no devices needed)."""
+
+    def __init__(self, shape, axes):
+        self.axis_names = tuple(axes)
+        self.devices = np.empty(shape, dtype=object)
+
+
+@pytest.fixture
+def mesh_2x4():
+    return FakeMesh((2, 4), ("data", "model"))
+
+
+@pytest.fixture
+def mesh_pod():
+    return FakeMesh((2, 4, 4), ("pod", "data", "model"))

@@ -1,0 +1,68 @@
+"""Checkpoint roundtrip + error paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint.ckpt import latest_step
+
+
+def _tree():
+    return {"layers": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "step_count": jnp.int32(7)}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 5, tree, {"note": "x"})
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step_discovery(tmp_path):
+    tree = _tree()
+    assert latest_step(str(tmp_path)) is None
+    for s in (1, 10, 3):
+        save_checkpoint(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 10
+    _, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 10
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), {"w": jnp.zeros((3,))})
+
+
+def test_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path), {"w": jnp.zeros((2,)),
+                                           "extra": jnp.zeros((1,))})
+
+
+def test_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), {"w": jnp.zeros((1,))})
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("rwkv6-1.6b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    save_checkpoint(str(tmp_path), 2, params)
+    restored, _ = restore_checkpoint(str(tmp_path), params)
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+             "targets": jnp.zeros((1, 8), jnp.int32)}
+    l1, _ = model.loss(params, batch)
+    l2, _ = model.loss(restored, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)

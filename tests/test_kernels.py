@@ -1,0 +1,118 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(42)
+
+
+def _rand(shape, dtype, salt):
+    return jax.random.normal(jax.random.fold_in(KEY, salt), shape,
+                             jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 512, 384),
+                                   (128, 1024, 256), (512, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dual_matmul_sweep(M, K, N, dtype):
+    x = _rand((M, K), dtype, 1)
+    w = _rand((K, N), dtype, 2)
+    u = _rand((K, N), jnp.float32, 3)
+    y0, y1 = ops.dual_matmul(x, w, u, mu=1e-2, bm=128, bn=128, bk=128)
+    r0, r1 = ref.dual_matmul_ref(x, w, u, mu=1e-2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y0, np.float32),
+                               np.asarray(r0, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(r1, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_dual_matmul_perturbation_direction():
+    """y1 - y0 must equal mu * x @ u (the two-point numerator)."""
+    x = _rand((128, 256), jnp.float32, 4)
+    w = _rand((256, 128), jnp.float32, 5)
+    u = _rand((256, 128), jnp.float32, 6)
+    mu = 1e-3
+    y0, y1 = ops.dual_matmul(x, w, u, mu=mu, bm=128, bn=128, bk=128)
+    np.testing.assert_allclose(np.asarray(y1 - y0),
+                               np.asarray(mu * (x @ u)), atol=1e-4)
+
+
+@pytest.mark.parametrize("S,hd,bq,bkv", [(128, 64, 64, 64),
+                                         (256, 64, 128, 64),
+                                         (256, 128, 64, 128),
+                                         (512, 32, 128, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(S, hd, bq, bkv, causal):
+    B, H, KV = 2, 4, 2
+    q = _rand((B, S, H, hd), jnp.float32, 7)
+    k = _rand((B, S, KV, hd), jnp.float32, 8)
+    v = _rand((B, S, KV, hd), jnp.float32, 9)
+    o = ops.flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv)
+    G = H // KV
+    o_ref = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        jnp.repeat(k, G, 2).transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        jnp.repeat(v, G, 2).transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        causal=causal).reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtype(dtype):
+    B, S, H, hd = 1, 128, 2, 64
+    q = _rand((B, S, H, hd), dtype, 10)
+    k = _rand((B, S, H, hd), dtype, 11)
+    v = _rand((B, S, H, hd), dtype, 12)
+    o = ops.flash_attention(q, k, v, causal=True, bq=64, bkv=64)
+    o_ref = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        k.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        v.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        causal=True).reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_matches_model_blocked_attention():
+    """The kernel and the model's scanning softmax are the same math."""
+    from repro.models.attention import blocked_attention
+    B, S, H, hd = 2, 256, 4, 64
+    q = _rand((B, S, H, hd), jnp.float32, 13)
+    k = _rand((B, S, H, hd), jnp.float32, 14)
+    v = _rand((B, S, H, hd), jnp.float32, 15)
+    o1 = ops.flash_attention(q, k, v, causal=True)
+    o2 = blocked_attention(q, k, v, causal=True, kv_block=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(1000,), (33, 7), (128, 128),
+                                   (4096,), (257,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_zo_update_sweep(shape, dtype):
+    w = _rand(shape, dtype, 16)
+    bits = jax.random.bits(jax.random.fold_in(KEY, 17), shape, jnp.uint32)
+    out = ops.zo_update({"w": w}, {"w": bits}, 0.05)["w"]
+    expect = ref.zo_update_ref(w, bits, jnp.float32(0.05))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=1e-6)
+
+
+def test_zo_update_is_rademacher_step():
+    """Update must move every coordinate by exactly +-scale."""
+    w = jnp.zeros((512,), jnp.float32)
+    bits = jax.random.bits(jax.random.fold_in(KEY, 18), (512,), jnp.uint32)
+    out = ops.zo_update({"w": w}, {"w": bits}, 0.1)["w"]
+    np.testing.assert_allclose(np.abs(np.asarray(out)), 0.1, atol=1e-7)
+    # roughly balanced signs
+    assert 0.3 < float(jnp.mean(out > 0)) < 0.7

@@ -1,0 +1,77 @@
+"""Theorem 1 executable: each attack succeeds against gradient-transmitting
+frameworks and collapses against ZOO-VFL."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import privacy
+
+
+def test_feature_inference_underdetermined_without_params():
+    """Curious adversary with only z_i = w^T x_i values: T*n equations in
+    (T+n)*d unknowns -> ratio < 1 for d > 1 (Gu 2020 defense argument)."""
+    z = np.zeros((10, 50))
+    ratio = privacy.feature_inference_attack(z, x_dim=12)
+    assert ratio < 1.0
+
+
+def test_feature_inference_succeeds_when_params_leak():
+    """Same attack IS a linear solve when w_t leaks (TG frameworks)."""
+    rng = np.random.default_rng(0)
+    d, n, T = 8, 6, 32
+    x_true = rng.normal(size=(n, d))
+    ws = [rng.normal(size=(d,)) for _ in range(T)]
+    zs = [w @ x_true.T for w in ws]
+    err = privacy.feature_inference_with_grads(ws, zs, x_true)
+    assert err < 1e-6        # total recovery => the leak is real
+
+
+def test_label_inference_leaks_from_intermediate_grads():
+    """Liu 2020: binary-CE intermediate gradient g_i = -y_i*sigmoid(-y z)
+    reveals the label by sign; multi-class by argmin."""
+    rng = np.random.default_rng(1)
+    n = 200
+    y = np.sign(rng.normal(size=n))
+    z = rng.normal(size=n)
+    g = -y * (1 / (1 + np.exp(y * z)))        # dL/dz for logistic loss
+    acc = privacy.label_inference_from_intermediate_grads(g, y)
+    assert acc == 1.0
+
+
+def test_label_inference_fails_from_function_values():
+    rng = np.random.default_rng(2)
+    n_rounds, batch = 64, 128
+    y = np.sign(rng.normal(size=batch))
+    h = rng.normal(loc=0.69, scale=0.05, size=n_rounds)  # round losses
+    acc = privacy.label_inference_from_function_values(h, y)
+    assert abs(acc - 0.5) < 0.1               # chance level
+
+
+def test_rma_infeasible_without_gradient():
+    z_t = np.ones(5)
+    z_tm1 = 2 * np.ones(5)
+    assert privacy.reverse_multiplication_attack(z_t, z_tm1, 0.1) is None
+    rec = privacy.reverse_multiplication_attack(z_t, z_tm1, 0.1,
+                                                g_t=np.full(5, 2.0))
+    np.testing.assert_allclose(rec, 5.0)      # with g_t it works
+
+
+def test_backdoor_replay_has_no_direction_control():
+    """Malicious replay of a scalar h yields a RANDOM-direction nudge:
+    cosine to any attacker-chosen target direction ~ 1/sqrt(d)."""
+    cosines = []
+    for s in range(30):
+        _, cos = privacy.backdoor_update_influence(
+            lr=1e-2, mu=1e-3, h_replay=1.0, h_true=0.3, w_dim=4096,
+            key=jax.random.key(s))
+        cosines.append(cos)
+    assert np.mean(cosines) < 0.05            # ~1/64, no targeting
+
+
+def test_exposure_report_matches_table1():
+    zoo = privacy.exposure_report("zoo-vfl")
+    assert not zoo["intermediate_grads"] and not zoo["model_params"]
+    tig = privacy.exposure_report("tig")
+    assert tig["intermediate_grads"]
+    tg = privacy.exposure_report("tg")
+    assert tg["model_params"] and tg["local_grads"]

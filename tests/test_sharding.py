@@ -1,0 +1,93 @@
+"""Sharding rules: divisibility guards, FSDP/tensor roles, batch/cache
+specs. Uses a duck-typed FakeMesh so no multi-device runtime is needed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.sharding import batch_pspecs, cache_pspecs, param_pspecs
+
+
+def _leaf_spec(specs, *path):
+    node = specs
+    for k in path:
+        node = node[k]
+    return node
+
+
+def test_dense_param_roles(mesh_2x4):
+    cfg = get_config("deepseek-7b", reduced=True)
+    params = jax.eval_shape(build_model(cfg).init, jax.random.key(0))
+    specs = param_pspecs(params, mesh_2x4)
+    attn = specs["layers"]["attn"]
+    assert attn["wq"] == P(None, "data", "model")   # fsdp-in, tensor-out
+    assert attn["wo"] == P(None, "model", "data")   # transposed pair
+    assert specs["layers"]["norm1"] == P()          # 1D replicated
+    assert specs["final_norm"] == P()
+
+
+def test_moe_expert_parallel(mesh_2x4):
+    cfg = get_config("qwen3-moe-30b-a3b", reduced=True)
+    params = jax.eval_shape(build_model(cfg).init, jax.random.key(0))
+    specs = param_pspecs(params, mesh_2x4)
+    assert specs["layers"]["moe"]["w_gate"] == P(None, "model", "data")
+    assert specs["layers"]["moe"]["w_down"] == P(None, "model", None,
+                                                 "data")
+
+
+def test_divisibility_guard_replicates(mesh_2x4):
+    """A dim not divisible by the axis stays replicated, never errors."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    # vocab 512 divisible by 4; make a fake tree with odd dims
+    tree = {"layers": {"attn": {"wq": jax.ShapeDtypeStruct((2, 255, 130),
+                                                           jnp.float32)}}}
+    specs = param_pspecs(tree, mesh_2x4)
+    assert specs["layers"]["attn"]["wq"] == P()     # 255 % 2, 130 % 4 != 0
+
+
+def test_batch_specs(mesh_2x4, mesh_pod):
+    batch = {"tokens": jax.ShapeDtypeStruct((32, 64), jnp.int32),
+             "odd": jax.ShapeDtypeStruct((3, 4), jnp.float32),
+             "scalar": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = batch_pspecs(batch, mesh_2x4)
+    assert specs["tokens"] == P("data")
+    assert specs["odd"] == P()                      # 3 % 2 != 0
+    assert specs["scalar"] == P()
+    specs_pod = batch_pspecs(batch, mesh_pod)
+    assert specs_pod["tokens"] == P(("pod", "data"))  # multi-pod axis used
+
+
+def test_cache_specs_batch_sharded(mesh_2x4):
+    cache = {"layers": {"kv": {
+        "k": jax.ShapeDtypeStruct((2, 8, 128, 4, 64), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((2, 8, 128, 4, 64), jnp.bfloat16)}}}
+    specs = cache_pspecs(cache, mesh_2x4)
+    # batch over data AND kv-heads over model (4 % 4 == 0)
+    assert specs["layers"]["kv"]["k"] == P(None, "data", None, "model")
+
+
+def test_cache_specs_seq_sharded_when_batch_small(mesh_2x4):
+    """batch=1 (long_500k): the sequence dim shards over 'model' instead —
+    flash-decoding style sequence parallelism."""
+    cache = {"layers": {"kv": {
+        "k": jax.ShapeDtypeStruct((2, 1, 4096, 8, 64), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((2, 1, 4096, 8, 64), jnp.bfloat16)}}}
+    specs = cache_pspecs(cache, mesh_2x4)
+    assert specs["layers"]["kv"]["k"] == P(None, None, "model")
+
+
+def test_ssm_state_heads_sharded(mesh_2x4):
+    cache = {"layers": {"S": jax.ShapeDtypeStruct((2, 4, 32, 64, 64),
+                                                  jnp.float32)}}
+    specs = cache_pspecs(cache, mesh_2x4)
+    assert specs["layers"]["S"] == P(None, "data", "model")
+
+
+def test_rwkv_cmix_down_projection_role(mesh_2x4):
+    cfg = get_config("rwkv6-1.6b", reduced=True)
+    params = jax.eval_shape(build_model(cfg).init, jax.random.key(0))
+    specs = param_pspecs(params, mesh_2x4)
+    # cmix.wv is (d_ff, d) — a down projection: tensor-in, fsdp-out
+    assert specs["layers"]["cmix"]["wv"] == P(None, "model", "data")

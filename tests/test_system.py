@@ -1,0 +1,118 @@
+"""End-to-end behaviour tests for the paper's system (AsyREVEL ZOO-VFL)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PaperFCNConfig, PaperLRConfig, VFLConfig
+from repro.core import asyrevel, tig
+from repro.core.vfl import PaperFCNModel, PaperLRModel, pad_features
+from repro.data.synthetic import make_classification
+
+
+@pytest.fixture(scope="module")
+def lr_setup():
+    X, y = make_classification(1500, 96, seed=0, noise=0.02)
+    q = 8
+    model = PaperLRModel(PaperLRConfig(num_features=96, num_parties=q))
+    data = {"x": pad_features(jnp.asarray(X), 96, q), "y": jnp.asarray(y)}
+    return model, data, y
+
+
+@pytest.mark.parametrize("direction", ["gaussian", "uniform"])
+def test_asyrevel_converges_black_box_lr(lr_setup, direction):
+    """Fig 3 claim: AsyREVEL-Gau/-Uni solve the black-box federated LR."""
+    model, data, y = lr_setup
+    vfl = VFLConfig(num_parties=8, mu=1e-3, lr_party=5e-2,
+                    lr_server=5e-2 / 8, max_delay=4, direction=direction)
+    state, losses = asyrevel.train(model, vfl, data, jax.random.key(0),
+                                   steps=3000, batch_size=64)
+    losses = np.asarray(losses)
+    assert np.isfinite(losses).all()
+    assert losses[-100:].mean() < 0.6 * losses[:100].mean()
+    pred = model.predict(state.w0, state.parties, data["x"])
+    assert float(jnp.mean(pred == data["y"])) > 0.8
+
+
+def test_synrevel_converges(lr_setup):
+    model, data, _ = lr_setup
+    vfl = VFLConfig(num_parties=8, mu=1e-3, lr_party=5e-2,
+                    lr_server=5e-2 / 8)
+    state, losses = asyrevel.train(model, vfl, data, jax.random.key(0),
+                                   steps=400, batch_size=64,
+                                   algorithm="synrevel")
+    losses = np.asarray(losses)
+    assert losses[-50:].mean() < 0.7 * losses[:50].mean()
+
+
+def test_async_matches_sync_quality(lr_setup):
+    """Staleness (tau=4) must not destroy convergence (Theorem 2)."""
+    model, data, _ = lr_setup
+    base = dict(num_parties=8, mu=1e-3, lr_party=5e-2, lr_server=5e-2 / 8)
+    _, l_async = asyrevel.train(model, VFLConfig(max_delay=4, **base),
+                                data, jax.random.key(1), steps=3000,
+                                batch_size=64)
+    _, l_fresh = asyrevel.train(model, VFLConfig(max_delay=0, **base),
+                                data, jax.random.key(1), steps=3000,
+                                batch_size=64)
+    a = float(np.asarray(l_async)[-200:].mean())
+    f = float(np.asarray(l_fresh)[-200:].mean())
+    assert a < 1.25 * f + 0.05
+
+
+def test_tig_black_box_refusal(lr_setup):
+    """Table 1 / Fig 3: TIG cannot train black-box models at all."""
+    model, data, _ = lr_setup
+    vfl = VFLConfig(num_parties=8)
+    with pytest.raises(tig.BlackBoxError):
+        tig.tig_train(model, vfl, data, jax.random.key(0), 5, 8,
+                      black_box=True)
+
+
+def test_tig_white_box_converges(lr_setup):
+    model, data, _ = lr_setup
+    vfl = VFLConfig(num_parties=8, lr_party=5e-2, lr_server=5e-2 / 8)
+    _, losses = tig.tig_train(model, vfl, data, jax.random.key(0),
+                              steps=1200, batch_size=64)
+    losses = np.asarray(losses)
+    assert losses[-50:].mean() < 0.6 * losses[:50].mean()
+
+
+def test_losslessness_vs_nonf(lr_setup):
+    """Table 4: federated (q=8) reaches the same accuracy as the
+    non-federated (q=1, all features on one party) counterpart."""
+    model, data, _ = lr_setup
+    vfl8 = VFLConfig(num_parties=8, mu=1e-3, lr_party=5e-2,
+                     lr_server=5e-2 / 8, max_delay=4)
+    st8, _ = asyrevel.train(model, vfl8, data, jax.random.key(2),
+                            steps=4000, batch_size=64)
+    acc8 = float(jnp.mean(model.predict(st8.w0, st8.parties, data["x"])
+                          == data["y"]))
+
+    m1 = PaperLRModel(PaperLRConfig(num_features=96, num_parties=1))
+    d1 = {"x": pad_features(data["x"][:, :96], 96, 1), "y": data["y"]}
+    vfl1 = VFLConfig(num_parties=1, mu=1e-3, lr_party=5e-2,
+                     lr_server=5e-2, max_delay=0)
+    st1, _ = asyrevel.train(m1, vfl1, d1, jax.random.key(2),
+                            steps=4000, batch_size=64)
+    acc1 = float(jnp.mean(m1.predict(st1.w0, st1.parties, d1["x"])
+                          == d1["y"]))
+    assert abs(acc8 - acc1) < 0.08, (acc8, acc1)
+
+
+def test_fcn_asyrevel_decreases_loss():
+    """The paper's deep (FCN) black-box model trains under AsyREVEL."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(600, 64)).astype(np.float32)
+    W = rng.normal(size=(64, 4))
+    y = (X @ W).argmax(-1)
+    model = PaperFCNModel(PaperFCNConfig(num_features=64, num_classes=4,
+                                         num_parties=4))
+    data = {"x": pad_features(jnp.asarray(X), 64, 4), "y": jnp.asarray(y)}
+    vfl = VFLConfig(num_parties=4, mu=1e-3, lr_party=3e-2,
+                    lr_server=3e-2 / 4)
+    _, losses = asyrevel.train(model, vfl, data, jax.random.key(0),
+                               steps=4000, batch_size=64)
+    losses = np.asarray(losses)
+    assert np.isfinite(losses).all()
+    assert losses[-200:].mean() < 0.85 * losses[:200].mean()

@@ -1,0 +1,120 @@
+"""VFL composite-model invariants (problem (P)) + vertical partitioning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import PaperFCNConfig, PaperLRConfig, VFLConfig
+from repro.core.vfl import (PaperFCNModel, PaperLRModel, nonconvex_reg,
+                            pad_features, split_features)
+from repro.data.vertical import pad_party_views, vertical_partition
+
+
+@settings(max_examples=50, deadline=None)
+@given(d=st.integers(1, 300), q=st.integers(1, 16))
+def test_split_features_partition_invariants(d, q):
+    """Blocks are disjoint, contiguous, cover [0,d), near-equal width."""
+    blocks = split_features(d, q)
+    assert len(blocks) == q
+    cursor = 0
+    widths = []
+    for start, size in blocks:
+        assert start == cursor
+        cursor += size
+        widths.append(size)
+    assert cursor == d
+    assert max(widths) - min(widths) <= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=st.integers(1, 100), q=st.integers(1, 8), n=st.integers(1, 5))
+def test_pad_features_shape_and_content(d, q, n):
+    x = jnp.arange(n * d, dtype=jnp.float32).reshape(n, d)
+    xp = pad_features(x, d, q)
+    pad = -(-d // q)
+    assert xp.shape == (n, pad * q)
+    np.testing.assert_array_equal(np.asarray(xp[:, :d]), np.asarray(x))
+    assert float(jnp.sum(jnp.abs(xp[:, d:]))) == 0.0
+
+
+def test_vertical_partition_views_disjoint_cover():
+    X = np.arange(60.0).reshape(4, 15)
+    views, blocks, perm = vertical_partition(X, 4)
+    recon = np.concatenate(views, axis=1)
+    np.testing.assert_array_equal(recon, X)
+    stacked, pad = pad_party_views(views)
+    assert stacked.shape == (4, 4 * pad)
+
+
+def test_lr_slices_match_party_views():
+    """slice_features(m) must see exactly party m's private block."""
+    d, q = 13, 4
+    model = PaperLRModel(PaperLRConfig(num_features=d, num_parties=q))
+    X = jnp.arange(2.0 * d).reshape(2, d)
+    Xp = pad_features(X, d, q)
+    for m in range(q):
+        sl = model.slice_features(Xp, m)
+        assert sl.shape == (2, model.pad)
+
+
+def test_full_loss_equals_server_plus_reg():
+    d, q = 16, 4
+    model = PaperLRModel(PaperLRConfig(num_features=d, num_parties=q))
+    key = jax.random.key(0)
+    w0 = model.init_server(key)
+    parties = model.init_parties_stacked(key)
+    # give parties nonzero weights so reg is nonzero
+    parties = jax.tree.map(
+        lambda a: a + jax.random.normal(key, a.shape), parties)
+    X = jax.random.normal(jax.random.fold_in(key, 1), (8, d))
+    Xp = pad_features(X, d, q)
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 2), (8,)))
+    lam = 0.01
+    total = model.full_loss(w0, parties, Xp, y, lam)
+    cs = model.all_party_outputs(parties, Xp)
+    h = model.server_forward(w0, cs, y)
+    reg = sum(nonconvex_reg(jax.tree.map(lambda a, m=m: a[m], parties))
+              for m in range(q))
+    np.testing.assert_allclose(float(total), float(h + lam * reg),
+                               rtol=1e-6)
+
+
+def test_replace_party_output_only_touches_one_column():
+    model = PaperLRModel(PaperLRConfig(num_features=8, num_parties=4))
+    cs = jnp.ones((3, 4))
+    new = model.replace_party_output(cs, jnp.full((3,), 9.0), 2)
+    np.testing.assert_array_equal(np.asarray(new[:, 2]), 9.0)
+    np.testing.assert_array_equal(np.asarray(new[:, [0, 1, 3]]), 1.0)
+
+
+def test_nonconvex_reg_properties():
+    """g(w) = sum w^2/(1+w^2): zero at 0, bounded by dim, symmetric."""
+    w = {"a": jnp.zeros((5,))}
+    assert float(nonconvex_reg(w)) == 0.0
+    w2 = {"a": jnp.full((5,), 1e6)}
+    assert float(nonconvex_reg(w2)) <= 5.0 + 1e-3
+    w3 = {"a": jnp.array([1.0, -1.0])}
+    assert abs(float(nonconvex_reg(w3)) - 1.0) < 1e-6
+
+
+def test_fcn_party_output_is_scalar_per_sample():
+    model = PaperFCNModel(PaperFCNConfig(num_features=32, num_parties=4))
+    key = jax.random.key(0)
+    w = model.init_party(key, 0)
+    x = jax.random.normal(key, (6, model.pad))
+    c = model.party_forward(w, x, 0)
+    assert c.shape == (6,)
+
+
+def test_transformer_vfl_concat_covers_d_model():
+    from repro.configs import get_config
+    from repro.core.vfl import TransformerVFLModel
+    from repro.models import build_model
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    vfl = VFLConfig(num_parties=4, party_hidden=16)
+    vm = TransformerVFLModel(build_model(cfg), vfl)
+    parties = vm.init_parties_stacked(jax.random.key(0))
+    toks = jnp.zeros((2, 8), jnp.int32)
+    cs = vm.all_party_outputs(parties, toks)
+    assert cs.shape == (2, 8, 4, cfg.d_model // 4)
