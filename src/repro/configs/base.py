@@ -180,6 +180,7 @@ class VFLConfig:
     party_hidden: int = 128       # width of the party tower F_m
     party_layers: int = 2         # depth of F_m (paper: 2-layer FCN)
     direction: str = "gaussian"   # gaussian (AsyREVEL-Gau) | uniform (-Uni)
+    #                               | rademacher (fused-kernel seed replay)
     mu: float = 1e-3              # smoothing parameter mu_m
     lr_party: float = 1e-3        # eta_m
     lr_server: float = 1e-3 / 8   # eta_0 = eta / q (paper setting)
@@ -191,6 +192,8 @@ class VFLConfig:
     #                               paper points to Liu et al. 2018)
     lam: float = 1e-4             # regularizer weight lambda
     perturb_server: bool = True   # also ZO-update w_0 (Eq. 17)
+    codec: str = "f32"            # up-link payload codec for the c values
+    #                               (core/exchange.py: f32 | bf16 | int8)
 
 
 @dataclass(frozen=True)

@@ -11,12 +11,20 @@ multiplier (Fig 3's async-vs-sync efficiency).
 The synchronous executor (SynREVEL) runs the same math but with a barrier
 per round — every party waits for the slowest.
 
+The message round itself (perturbation, up-link codec, coefficient, update
+apply) is the SAME core/exchange.py ZOExchange the device-scan trainer in
+asyrevel.py uses — this module only adds threads, wall-clock, and the wire:
+the party encodes (c, c_hat) through the codec, the server decodes, and
+every byte that crosses is measured (``HostRunResult.bytes_up/down`` read
+the exchange's CommsMeter, so the counters cannot drift from the payloads).
+
 This module reproduces the paper's wall-clock experiments faithfully at the
 paper's own scale; the jit/scan trainer in asyrevel.py is the TPU-scale
 adaptation of the same update process.
 """
 from __future__ import annotations
 
+import functools
 import threading
 import time
 from dataclasses import dataclass, field
@@ -26,16 +34,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import VFLConfig
+from repro.core.exchange import CommsMeter, ZOExchange
 from repro.core.vfl import VFLModel
-from repro.utils.prng import sample_direction
+
+# This container has ONE core: concurrent XLA-CPU executions from many
+# threads thrash (dispatch contention blows sub-ms calls up to ~100ms).
+# All jax work is serialized behind one device lock; the PARALLEL part of
+# the simulation is the sleep-modelled party compute — exactly the real
+# deployment, where each party owns its own machine and only the tiny
+# function-value messages serialize at the server.
+_JAX_LOCK = threading.Lock()
 
 
 @dataclass
 class HostRunResult:
     history: list = field(default_factory=list)   # (wallclock_s, loss)
     updates: int = 0
-    bytes_up: int = 0        # party -> server payload bytes
-    bytes_down: int = 0      # server -> party payload bytes
+    comms: CommsMeter = field(default_factory=CommsMeter)
+
+    # Transport counters are PER ROUND, measured from the encoded wire
+    # arrays by the shared ZOExchange: up = the (c, c_hat) payload pair,
+    # down = the (h, h_bar) scalar pair — the server replies batch-MEAN
+    # losses, so the down-link is 2 * 4 bytes per round, NOT per sample.
+    @property
+    def bytes_up(self) -> int:
+        return self.comms.up_bytes
+
+    @property
+    def bytes_down(self) -> int:
+        return self.comms.down_bytes
 
     def time_to_loss(self, target: float):
         for t, lo in self.history:
@@ -44,28 +71,68 @@ class HostRunResult:
         return None
 
 
+@functools.partial(jax.jit, static_argnames=("model", "vfl"))
+def _serve_jit(model, vfl, w0, cs, cs_hat, y, key):
+    """Fused Algorithm-1 server side: one dispatch per round keeps the
+    lock's critical section short. Eq. 17 routes through the exchange."""
+    ex = ZOExchange.from_config(vfl)
+    h = model.server_forward(w0, cs, y)
+    h_bar = model.server_forward(w0, cs_hat, y)
+    if vfl.perturb_server:
+        w0 = ex.server_update(w0, key, h,
+                              lambda w0p: model.server_forward(w0p, cs, y),
+                              vfl.lr_server)
+    return h, h_bar, w0
+
+
+@functools.partial(jax.jit, static_argnames=("model", "vfl", "m"))
+def _party_fused_jit(model, vfl, w_m, x_m, key, m):
+    """One dispatch: perturb + both local evals + both regs."""
+    ex = ZOExchange.from_config(vfl)
+    w_p, u = ex.perturb(w_m, key)
+    c = model.party_forward(w_m, x_m, m)
+    c_hat = model.party_forward(w_p, x_m, m)
+    return c, c_hat, model.regularizer(w_m), model.regularizer(w_p), u
+
+
+@functools.partial(jax.jit, static_argnames=("vfl",))
+def _party_apply_jit(vfl, w_m, u, coeff):
+    return ZOExchange.from_config(vfl).apply_direction(
+        w_m, u, coeff, vfl.lr_party)
+
+
 class _Server:
     """Holds w0 + the latest c table; all access behind one lock (the MPI
-    process would serialize the same way)."""
+    process would serialize the same way). Receives CODEC-ENCODED payloads
+    and decodes through the shared exchange — the measured byte counters
+    are the real wire sizes."""
 
-    def __init__(self, model: VFLModel, vfl: VFLConfig, n: int, key):
+    def __init__(self, model: VFLModel, vfl: VFLConfig, n: int, key,
+                 ex: ZOExchange):
         self.model = model
         self.vfl = vfl
+        self.ex = ex
         self.lock = threading.Lock()
         self.w0 = model.init_server(key)
         # latest function value of each party on each sample ("received
         # previously", Algorithm 1) — warm-started to zeros.
         self.c_table = np.zeros((n, model.num_parties), np.float32)
-        self.losses = HostRunResult()
+        self.losses = HostRunResult(comms=ex.meter)
         self.t0 = time.perf_counter()
 
-    def handle(self, m: int, idx: np.ndarray, c: np.ndarray,
-               c_hat: np.ndarray, update_w0: bool = True):
-        """Algorithm 1 lines 8-11. Returns (h, h_bar)."""
+    def handle(self, m: int, idx: np.ndarray, wire_c, wire_c_hat,
+               update_w0: bool = True):
+        """Algorithm 1 lines 8-11. Takes the encoded up-link payloads,
+        returns the (h, h_bar) scalars. Byte accounting: up = measured
+        size of the two encoded payloads (metered at encode_up), down =
+        2 scalars per ROUND (batch-mean losses)."""
         with self.lock:
+            with _JAX_LOCK:
+                c = np.asarray(self.ex.decode_up(wire_c), np.float32)
+                c_hat = jnp.asarray(self.ex.decode_up(wire_c_hat))
             self.c_table[idx, m] = c
             cs = jnp.asarray(self.c_table[idx])          # stale others
-            cs_hat = cs.at[:, m].set(jnp.asarray(c_hat))
+            cs_hat = cs.at[:, m].set(c_hat)
             y = self.y[idx]
             key = jax.random.key(self.losses.updates)
             with _JAX_LOCK:
@@ -77,64 +144,8 @@ class _Server:
             self.losses.updates += 1
             self.losses.history.append(
                 (time.perf_counter() - self.t0, h))
-            # payload accounting: up = 2 function-value vectors (c, c_hat),
-            # down = 2 scalars per sample (h, h_bar)
-            self.losses.bytes_up += 2 * c.nbytes
-            self.losses.bytes_down += 2 * 4
-        return h, h_bar
-
-
-import functools
-
-from repro.core import zoo
-
-
-# This container has ONE core: concurrent XLA-CPU executions from many
-# threads thrash (dispatch contention blows sub-ms calls up to ~100ms).
-# All jax work is serialized behind one device lock; the PARALLEL part of
-# the simulation is the sleep-modelled party compute — exactly the real
-# deployment, where each party owns its own machine and only the tiny
-# function-value messages serialize at the server.
-_JAX_LOCK = threading.Lock()
-
-
-@functools.partial(jax.jit, static_argnames=("model", "vfl"))
-def _serve_jit(model, vfl, w0, cs, cs_hat, y, key):
-    """Fused Algorithm-1 server side: one dispatch per round keeps the
-    lock's critical section short."""
-    h = model.server_forward(w0, cs, y)
-    h_bar = model.server_forward(w0, cs_hat, y)
-    if vfl.perturb_server:
-        w0p, u0 = zoo.perturb(w0, key, vfl.mu, vfl.direction)
-        h_hat = model.server_forward(w0p, cs, y)
-        coeff = zoo.zo_coefficient(h_hat, h, vfl.mu)
-        w0 = jax.tree.map(lambda a, u: a - vfl.lr_server * coeff * u,
-                          w0, u0)
-    return h, h_bar, w0
-
-
-@functools.partial(jax.jit, static_argnames=("model", "vfl", "m"))
-def _party_fused_jit(model, vfl, w_m, x_m, key, m):
-    """One dispatch: perturb + both local evals + both regs."""
-    w_p, u = zoo.perturb(w_m, key, vfl.mu, vfl.direction)
-    c = model.party_forward(w_m, x_m, m)
-    c_hat = model.party_forward(w_p, x_m, m)
-    return c, c_hat, model.regularizer(w_m), model.regularizer(w_p), u
-
-
-@functools.partial(jax.jit, static_argnames=("vfl",))
-def _party_apply_jit(vfl, w_m, u, coeff):
-    return jax.tree.map(lambda a, d: a - vfl.lr_party * coeff * d, w_m, u)
-
-
-def _perturb(tree, key, mu, dist):
-    leaves, treedef = jax.tree.flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    us = [np.asarray(sample_direction(k, l.shape, dist))
-          for k, l in zip(keys, leaves)]
-    u = jax.tree.unflatten(treedef, us)
-    pert = jax.tree.map(lambda w, d: w + mu * d, tree, u)
-    return pert, u
+            self.ex.meter.add_round()
+            return self.ex.send_down(h, h_bar)
 
 
 class HostAsyncTrainer:
@@ -151,32 +162,45 @@ class HostAsyncTrainer:
         self.compute_cost_s = compute_cost_s
         self.straggler = straggler or {}
         self.seed = seed
+        self.exchange = ZOExchange.from_config(vfl, meter=CommsMeter())
         q = model.num_parties
         keys = jax.random.split(jax.random.key(seed), q + 1)
-        self.server = _Server(model, vfl, len(self.y), keys[0])
+        self.server = _Server(model, vfl, len(self.y), keys[0],
+                              self.exchange)
         self.server.y = jnp.asarray(self.y)
         self.party_w = [model.init_party(keys[m + 1], m) for m in range(q)]
 
-    # ---- one party-side update (shared by both executors) ---------------
-    def _party_update(self, m: int, rng: np.random.Generator):
-        vfl, model = self.vfl, self.model
-        idx = rng.integers(0, len(self.y), self.batch_size)
+    # ---- one party-side round (shared by both executors) ----------------
+    def party_step(self, m: int, idx: np.ndarray, key):
+        """Deterministic core of one Algorithm-1 round for party m on the
+        given batch: perturb/eval locally, encode + send (c, c_hat) up,
+        receive (h, h_bar) down, form the coefficient, apply the block
+        update. `key` drives the perturbation direction (and, for the
+        stochastic codec, the rounding)."""
+        vfl, ex = self.vfl, self.exchange
         w_m = self.party_w[m]
-        key = jax.random.key(rng.integers(1 << 31))
         with _JAX_LOCK:
-            x_m = model.slice_features(jnp.asarray(self.X[idx]), m)
+            x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
             c, c_hat, reg0, reg1, u = _party_fused_jit(
-                self.model, self.vfl, w_m, x_m, key, m)
-            c, c_hat = np.asarray(c), np.asarray(c_hat)
+                self.model, vfl, w_m, x_m, key, m)
+            wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
+            wire_c_hat = ex.encode_up(c_hat, jax.random.fold_in(key, 2))
+            wire_c = jax.tree.map(np.asarray, wire_c)
+            wire_c_hat = jax.tree.map(np.asarray, wire_c_hat)
         # simulated local compute cost (scales with the block dim)
         t = self.compute_cost_s * self.straggler.get(m, 1.0)
         if t > 0:
             time.sleep(t)
-        h, h_bar = self.server.handle(m, idx, c, c_hat)
-        coeff = ((h_bar + vfl.lam * float(reg1))
-                 - (h + vfl.lam * float(reg0))) / vfl.mu
+        h, h_bar = self.server.handle(m, idx, wire_c, wire_c_hat)
+        coeff = ex.coefficient(h_bar + vfl.lam * float(reg1),
+                               h + vfl.lam * float(reg0))
         with _JAX_LOCK:
-            self.party_w[m] = _party_apply_jit(self.vfl, w_m, u, coeff)
+            self.party_w[m] = _party_apply_jit(vfl, w_m, u, coeff)
+
+    def _party_update(self, m: int, rng: np.random.Generator):
+        idx = rng.integers(0, len(self.y), self.batch_size)
+        key = jax.random.key(rng.integers(1 << 31))
+        self.party_step(m, idx, key)
 
     def run_async(self, total_updates: int) -> HostRunResult:
         """Parties run until the GLOBAL update budget is spent — fast

@@ -14,8 +14,11 @@ Each step performs exactly the paper's message pattern:
   party m uploads (c_m, c_hat_m); the server computes h, h_bar, h_hat and
   returns (h, h_bar); party m forms the two-point estimate and updates w_m;
   the server forms Eq. (17) and updates w_0. Nothing but function values
-  crosses the party/server boundary — the trainer code enforces this
-  structurally (the party update consumes only scalars + its own state).
+  crosses the party/server boundary — the round itself (perturb, payload
+  codec, coefficient, apply) lives in core/exchange.py's ZOExchange, so
+  the boundary is enforced in ONE place shared with the host executor and
+  zo_sgd: the party update consumes only scalars + its own state, and the
+  up-link payload goes through the configured codec (vfl.codec).
 
 The host-level REAL asynchronous executor (threads, stragglers, wall-clock)
 lives in core/async_host.py; this module is the jit-able scale path and the
@@ -30,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import VFLConfig
-from repro.core import zoo
+from repro.core.exchange import ZOExchange
 from repro.core.vfl import VFLModel
 from repro.utils.prng import fold_name
 
@@ -71,12 +74,15 @@ def _activation_probs(vfl: VFLConfig):
     return jnp.full((vfl.num_parties,), 1.0 / vfl.num_parties)
 
 
-def asyrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch):
+def asyrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch,
+                  ex: ZOExchange | None = None):
     """One AsyREVEL iteration (Algorithm 1 lines 2-11)."""
-    q, tau, mu = vfl.num_parties, vfl.max_delay, vfl.mu
+    ex = ex if ex is not None else ZOExchange.from_config(vfl)
+    q, tau = vfl.num_parties, vfl.max_delay
     key = jax.random.fold_in(state.key, state.step)
-    k_m, k_d, k_u, k_u0 = (fold_name(key, s)
-                           for s in ("party", "delay", "u", "u0"))
+    k_m, k_d, k_u, k_u0, k_c = (fold_name(key, s)
+                                for s in ("party", "delay", "u", "u0",
+                                          "codec"))
     x = model.party_args(batch)
     y = model.server_args(batch)
 
@@ -89,8 +95,13 @@ def asyrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch):
     slots = (state.step - 1 - delays) % (tau + 1)
     stale = _stale_parties(state.hist, slots)
 
-    # --- step 4: party m computes c_m and c_hat_m on PRIVATE data --------
+    # --- step 4-5: party m computes c_m, c_hat_m on PRIVATE data; the c
+    # table the server holds is what survived the up-link codec, one
+    # MESSAGE (party) at a time — each party's upload is its own tensor
+    # with its own codec scale, matching the host executor's wire --------
     cs = model.all_party_outputs(stale, x)                  # stale c's
+    cs = model.map_party_outputs(
+        cs, lambda c, m: ex.roundtrip_up(c, jax.random.fold_in(k_c, m)))
     w_m = _gather_party(state.parties, m_t)
     x_m = model.slice_features(x, m_t)
     h = model.server_forward(state.w0, cs, y)               # h_{i,m}
@@ -99,50 +110,24 @@ def asyrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch):
     # one or several directions (num_directions > 1 = variance-reduced
     # averaging, beyond-paper; each direction costs one extra (c_hat,
     # h_bar) round trip — still only function values)
-    def one_direction(k):
-        w_m_pert, u = zoo.perturb(w_m, k, mu, vfl.direction)
+    def f_of(w_m_pert):
         c_hat = model.party_forward(w_m_pert, x_m, m_t)
+        c_hat = ex.roundtrip_up(c_hat, fold_name(key, "codec_hat"))
         cs_hat = model.replace_party_output(cs, c_hat, m_t)
         h_bar = model.server_forward(state.w0, cs_hat, y)   # h-bar_{i,m}
-        reg1 = model.regularizer(w_m_pert)
-        coeff = zoo.zo_coefficient(h_bar + vfl.lam * reg1,
-                                   h + vfl.lam * reg0, mu)
-        return zoo.zo_gradient(u, coeff)
+        return h_bar + vfl.lam * model.regularizer(w_m_pert)
 
-    K = vfl.num_directions
-    if K == 1 and vfl.seed_replay:
-        # MeZO-style: keep only the scalar coefficient; regenerate u at the
-        # update site (the fused-kernel path on TPU — kernels/zo_update)
-        w_m_pert, _ = zoo.perturb(w_m, k_u, mu, vfl.direction)
-        c_hat = model.party_forward(w_m_pert, x_m, m_t)
-        h_bar = model.server_forward(
-            state.w0, model.replace_party_output(cs, c_hat, m_t), y)
-        coeff = zoo.zo_coefficient(
-            h_bar + vfl.lam * model.regularizer(w_m_pert),
-            h + vfl.lam * reg0, mu)
-        g_m = zoo.zo_gradient_from_seed(k_u, w_m, vfl.direction, coeff)
-    elif K == 1:
-        g_m = one_direction(k_u)
-    else:
-        gs = jax.vmap(one_direction)(jax.random.split(k_u, K))
-        g_m = jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
-
-    # --- step 9: server's own estimate (Eq. 17) --------------------------
-    w0_pert, u_0 = zoo.perturb(state.w0, k_u0, mu, vfl.direction)
-    h_hat = model.server_forward(w0_pert, cs, y)            # h-hat_{i,m}
+    g_m = ex.party_gradient(w_m, k_u, h + vfl.lam * reg0, f_of)
 
     # --- step 6-7: party update (Eq. 15) ----------------------------------
-    parties = jax.tree.map(
-        lambda a, g: a.at[m_t].add(
-            (-vfl.lr_party * g).astype(a.dtype)), state.parties, g_m)
+    parties = ex.apply_block(state.parties, m_t, g_m, vfl.lr_party)
 
-    # --- step 10-11: server update (Eq. 17) -------------------------------
+    # --- step 9-11: server's own estimate + update (Eq. 17) ---------------
     if vfl.perturb_server:
-        coeff_0 = zoo.zo_coefficient(h_hat, h, mu)
-        g_0 = zoo.zo_gradient(u_0, coeff_0)
-        w0 = jax.tree.map(
-            lambda a, g: (a - vfl.lr_server * g).astype(a.dtype),
-            state.w0, g_0)
+        w0 = ex.server_update(
+            state.w0, k_u0, h,
+            lambda w0p: model.server_forward(w0p, cs, y),   # h-hat_{i,m}
+            vfl.lr_server)
     else:
         w0 = state.w0
 
@@ -153,40 +138,42 @@ def asyrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch):
     return new_state, h
 
 
-def synrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch):
+def synrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch,
+                  ex: ZOExchange | None = None):
     """Synchronous counterpart: every round ALL parties (and the server)
     compute fresh c's, perturb, and update together — no staleness."""
-    q, mu = vfl.num_parties, vfl.mu
+    ex = ex if ex is not None else ZOExchange.from_config(vfl)
+    q = vfl.num_parties
     key = jax.random.fold_in(state.key, state.step)
+    k_c = fold_name(key, "codec")
     x = model.party_args(batch)
     y = model.server_args(batch)
     cs = model.all_party_outputs(state.parties, x)
+    cs = model.map_party_outputs(
+        cs, lambda c, m: ex.roundtrip_up(c, jax.random.fold_in(k_c, m)))
     h = model.server_forward(state.w0, cs, y)
 
     new_parties = state.parties
     for m in range(q):
         k_u = fold_name(key, f"u{m}")
         w_m = _gather_party(state.parties, m)
-        w_m_pert, u_m = zoo.perturb(w_m, k_u, mu, vfl.direction)
-        c_hat = model.party_forward(w_m_pert, model.slice_features(x, m), m)
-        cs_hat = model.replace_party_output(cs, c_hat, m)
-        h_bar = model.server_forward(state.w0, cs_hat, y)
-        coeff = zoo.zo_coefficient(
-            h_bar + vfl.lam * model.regularizer(w_m_pert),
-            h + vfl.lam * model.regularizer(w_m), mu)
-        g_m = zoo.zo_gradient(u_m, coeff)
-        new_parties = jax.tree.map(
-            lambda a, g, mm=m: a.at[mm].add(
-                (-vfl.lr_party * g).astype(a.dtype)), new_parties, g_m)
+
+        def f_of(w_m_pert, m=m):
+            c_hat = model.party_forward(
+                w_m_pert, model.slice_features(x, m), m)
+            c_hat = ex.roundtrip_up(c_hat, fold_name(key, f"codec_hat{m}"))
+            h_bar = model.server_forward(
+                state.w0, model.replace_party_output(cs, c_hat, m), y)
+            return h_bar + vfl.lam * model.regularizer(w_m_pert)
+
+        g_m = ex.party_gradient(
+            w_m, k_u, h + vfl.lam * model.regularizer(w_m), f_of)
+        new_parties = ex.apply_block(new_parties, m, g_m, vfl.lr_party)
 
     if vfl.perturb_server:
-        w0_pert, u_0 = zoo.perturb(state.w0, fold_name(key, "u0"), mu,
-                                   vfl.direction)
-        h_hat = model.server_forward(w0_pert, cs, y)
-        coeff_0 = zoo.zo_coefficient(h_hat, h, mu)
-        w0 = jax.tree.map(
-            lambda a, g: (a - vfl.lr_server * g).astype(a.dtype),
-            state.w0, zoo.zo_gradient(u_0, coeff_0))
+        w0 = ex.server_update(
+            state.w0, fold_name(key, "u0"), h,
+            lambda w0p: model.server_forward(w0p, cs, y), vfl.lr_server)
     else:
         w0 = state.w0
     new_state = AsyState(w0, new_parties, state.hist, state.step + 1,
@@ -206,11 +193,12 @@ def train(model: VFLModel, vfl: VFLConfig, data, key, steps: int,
     n = jax.tree.leaves(data)[0].shape[0]
     state = init_state(model, vfl, key)
     step_fn = asyrevel_step if algorithm == "asyrevel" else synrevel_step
+    ex = ZOExchange.from_config(vfl)
 
     def body(state, k):
         idx = jax.random.randint(k, (batch_size,), 0, n)
         batch = jax.tree.map(lambda a: a[idx], data)
-        return step_fn(model, vfl, state, batch)
+        return step_fn(model, vfl, state, batch, ex)
 
     keys = jax.random.split(jax.random.fold_in(key, 7), steps)
     state, losses = jax.lax.scan(body, state, keys)

@@ -1,8 +1,9 @@
 """Per-round communication overhead (PRCO) accounting — paper Table 3.
 
 For one (party m, minibatch B) round:
-  ZOO-VFL (ours): up   = 2 * B * c_dim * 4 bytes     (c, c_hat)
-                  down = 2 * 4 bytes                  (h, h_bar scalars)
+  ZOO-VFL (ours): up   = 2 * B * c_dim * v bytes     (c, c_hat; v = bytes
+                  per value under the up-link codec, + per-message codec
+                  overhead), down = 2 * 4 bytes       (h, h_bar scalars)
   TIG           : up   = B * c_dim * 4
                   down = B * c_dim * 4                (dL/dc_m per sample)
   TG (param/grad transmitting): up/down = d_m * 4    (the local gradient /
@@ -11,12 +12,22 @@ For one (party m, minibatch B) round:
 The paper's reported "ratios of time spending" compare transmitting a
 d_l-dimensional gradient against transmitting the function values; we report
 the same ratio in bytes plus a latency model ratio.
+
+These formulas are ANALYTIC; the executors measure real encoded payload
+bytes through core/exchange.py's ZOExchange, and ``validate_measured``
+(exercised by tests/test_exchange.py and benchmarks/bench_communication.py)
+asserts the two agree — the table is an audited claim, not documentation.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 FLOAT = 4
+
+# analytic wire cost per c value + fixed per-message overhead, by codec
+# (must track core/exchange.py's Codec.nbytes — validate_measured checks)
+CODEC_VALUE_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+CODEC_MSG_OVERHEAD = {"f32": 0, "bf16": 0, "int8": 4}   # int8: f32 scale
 
 
 @dataclass(frozen=True)
@@ -29,8 +40,31 @@ class RoundComms:
         return self.up_bytes + self.down_bytes
 
 
-def zoo_vfl_round(batch: int, c_dim: int = 1) -> RoundComms:
-    return RoundComms(2 * batch * c_dim * FLOAT, 2 * FLOAT)
+def zoo_vfl_round(batch: int, c_dim: int = 1, codec: str = "f32",
+                  num_directions: int = 1) -> RoundComms:
+    """One party round: the base c plus one c_hat per direction go up;
+    h plus one h_bar per direction come down (scalars per ROUND — the
+    server replies batch-mean losses)."""
+    per_msg = (batch * c_dim * CODEC_VALUE_BYTES[codec]
+               + CODEC_MSG_OVERHEAD[codec])
+    k = num_directions
+    return RoundComms((1 + k) * per_msg, (1 + k) * FLOAT)
+
+
+def validate_measured(measured: RoundComms, batch: int, c_dim: int = 1,
+                      codec: str = "f32",
+                      num_directions: int = 1) -> RoundComms:
+    """Check a MEASURED per-round byte count (from ZOExchange's codec /
+    CommsMeter) against the analytic formula; returns the analytic value
+    or raises with both sides."""
+    analytic = zoo_vfl_round(batch, c_dim, codec, num_directions)
+    if (measured.up_bytes, measured.down_bytes) != \
+            (analytic.up_bytes, analytic.down_bytes):
+        raise AssertionError(
+            f"PRCO drift: measured {measured} != analytic {analytic} "
+            f"(batch={batch}, c_dim={c_dim}, codec={codec}, "
+            f"K={num_directions})")
+    return analytic
 
 
 def tig_round(batch: int, c_dim: int = 1) -> RoundComms:

@@ -1,0 +1,330 @@
+"""ZOExchange — the ONE implementation of Algorithm 1's message round.
+
+The paper's central systems claim is that nothing but function values ever
+crosses the party/server boundary: party m uploads (c_m, c_hat_m), the
+server replies (h, h_bar), and both sides form their updates from those
+scalars plus purely local state. Before this module existed that round was
+implemented four separate times (asyrevel_step, synrevel_step, the
+threaded HostAsyncTrainer/_Server pair, and zo_sgd_step); this class owns
+it once, so the privacy boundary is enforced — and instrumented — in one
+place.
+
+Mapping to Algorithm 1 (see also docs/exchange.md):
+
+  line 4  (party m computes c, c_hat on private data)   perturb()
+  line 5  (party m sends c, c_hat up)                   encode_up()/decode_up()
+  line 8  (server returns h, h_bar down)                send_down()
+  line 6  (two-point coefficient, Eqs. 14-15)           coefficient(),
+                                                        party_gradient()
+  line 7  (party update w_m)                            apply_block(),
+                                                        apply_direction(),
+                                                        apply_from_seed(),
+                                                        apply_fused()
+  lines 9-11 (server's own estimate + update, Eq. 17)   server_update()
+
+Codec-aware transport: the up-link payload (the c function values — the
+only non-scalar message in the protocol) goes through a pluggable
+``Codec`` (f32 passthrough, bf16, or stochastic-rounded int8). Byte
+counts are MEASURED from the encoded wire arrays (``wire_nbytes``), not
+hand-derived; ``core/comms.py``'s analytic PRCO formulas are validated
+against these counters in tests/test_exchange.py.
+
+Inside jit/scan the per-round payload size is static, so jit paths use
+``round_comms()`` (shape-derived, same arithmetic as the measured path);
+the threaded host executor attaches a ``CommsMeter`` and accumulates the
+real encoded-array sizes round by round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import VFLConfig
+from repro.core import zoo
+from repro.core.comms import RoundComms
+from repro.kernels import ops as kernel_ops
+
+SCALAR_BYTES = 4          # every function value on the wire is one f32
+
+
+def wire_nbytes(wire) -> int:
+    """Measured payload size: total bytes of the encoded wire arrays."""
+    return int(sum(np.asarray(leaf).nbytes for leaf in jax.tree.leaves(wire)))
+
+
+# ----------------------------------------------------------------- codecs --
+
+class Codec:
+    """Encodes the party->server payload (the c function-value vectors).
+
+    ``encode`` may take a PRNG key (used by stochastic rounding); ``decode``
+    returns the float32 values the server actually consumes. ``nbytes`` is
+    the wire size computed from the UNencoded value's shape — it must agree
+    with ``wire_nbytes(encode(c))``, and tests assert that it does.
+    """
+
+    name = "abstract"
+
+    def encode(self, c, key=None):
+        raise NotImplementedError
+
+    def decode(self, wire):
+        raise NotImplementedError
+
+    def nbytes(self, c) -> int:
+        raise NotImplementedError
+
+    def roundtrip(self, c, key=None):
+        return self.decode(self.encode(c, key))
+
+
+class F32Codec(Codec):
+    """Lossless passthrough — the paper's own wire format."""
+
+    name = "f32"
+
+    def encode(self, c, key=None):
+        return jnp.asarray(c, jnp.float32)
+
+    def decode(self, wire):
+        return wire
+
+    def nbytes(self, c) -> int:
+        return int(np.prod(np.shape(c))) * 4
+
+
+class BF16Codec(Codec):
+    """Halves up-link bytes; ~3 decimal digits of the function values."""
+
+    name = "bf16"
+
+    def encode(self, c, key=None):
+        return jnp.asarray(c).astype(jnp.bfloat16)
+
+    def decode(self, wire):
+        return wire.astype(jnp.float32)
+
+    def nbytes(self, c) -> int:
+        return int(np.prod(np.shape(c))) * 2
+
+
+class Int8StochasticCodec(Codec):
+    """Per-tensor absmax scale + stochastic rounding to int8.
+
+    E[decode(encode(c))] = c (the rounding noise is zero-mean), so the
+    two-point coefficient stays an unbiased function-value difference —
+    the DPZV-style compression of exactly this channel. Wire = int8 values
+    + one f32 scale.
+    """
+
+    name = "int8"
+
+    def encode(self, c, key=None):
+        c = jnp.asarray(c, jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(c)), 1e-12) / 127.0
+        x = c / scale
+        if key is not None:
+            x = jnp.floor(x + jax.random.uniform(key, c.shape))
+        else:
+            x = jnp.round(x)
+        q = jnp.clip(x, -127, 127).astype(jnp.int8)
+        return q, scale
+
+    def decode(self, wire):
+        q, scale = wire
+        return q.astype(jnp.float32) * scale
+
+    def nbytes(self, c) -> int:
+        return int(np.prod(np.shape(c))) + 4          # values + scale
+
+
+CODECS = {c.name: c for c in (F32Codec(), BF16Codec(), Int8StochasticCodec())}
+
+
+def get_codec(codec) -> Codec:
+    if isinstance(codec, Codec):
+        return codec
+    try:
+        return CODECS[codec]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {codec!r}; have {sorted(CODECS)}") from None
+
+
+# ------------------------------------------------------------------ meter --
+
+@dataclass
+class CommsMeter:
+    """Measured transport counters, accumulated round by round."""
+
+    up_bytes: int = 0
+    down_bytes: int = 0
+    rounds: int = 0
+
+    def add_up(self, n: int):
+        self.up_bytes += int(n)
+
+    def add_down(self, n: int):
+        self.down_bytes += int(n)
+
+    def add_round(self):
+        self.rounds += 1
+
+
+# --------------------------------------------------------------- exchange --
+
+class ZOExchange:
+    """Owns the full two-point round of Algorithm 1 (see module docstring).
+
+    Stateless apart from the optional ``meter`` — safe to construct inside
+    a jitted trace (jit paths pass ``meter=None``; traced code must not
+    mutate Python counters per step).
+    """
+
+    def __init__(self, mu: float, direction: str = "gaussian",
+                 lam: float = 0.0, num_directions: int = 1,
+                 seed_replay: bool = False, codec="f32",
+                 meter: CommsMeter | None = None):
+        self.mu = mu
+        self.direction = direction
+        self.lam = lam
+        self.num_directions = num_directions
+        self.seed_replay = seed_replay
+        self.codec = get_codec(codec)
+        self.meter = meter
+
+    @classmethod
+    def from_config(cls, vfl: VFLConfig,
+                    meter: CommsMeter | None = None) -> "ZOExchange":
+        return cls(mu=vfl.mu, direction=vfl.direction, lam=vfl.lam,
+                   num_directions=vfl.num_directions,
+                   seed_replay=vfl.seed_replay,
+                   codec=getattr(vfl, "codec", "f32"), meter=meter)
+
+    # ---- wire: party -> server (Algorithm 1 line 5) ----------------------
+    def encode_up(self, c, key=None):
+        """Party side: function values -> wire payload (+ measured bytes)."""
+        wire = self.codec.encode(c, key)
+        if self.meter is not None:
+            self.meter.add_up(wire_nbytes(wire))
+        return wire
+
+    def decode_up(self, wire):
+        """Server side: wire payload -> the f32 values F_0 consumes."""
+        return self.codec.decode(wire)
+
+    def roundtrip_up(self, c, key=None):
+        """What the server sees after the up-link (identity for f32)."""
+        return self.codec.roundtrip(c, key)
+
+    # ---- wire: server -> party (Algorithm 1 line 8) ----------------------
+    def send_down(self, *fvals):
+        """The reply is scalar function values only — h, h_bar (and one
+        h_bar per extra direction). Metered per ROUND, not per sample: the
+        server returns batch-mean losses."""
+        if self.meter is not None:
+            self.meter.add_down(len(fvals) * SCALAR_BYTES)
+        return fvals if len(fvals) > 1 else fvals[0]
+
+    # ---- estimator math (Eqs. 14-15) -------------------------------------
+    def perturb(self, w, key):
+        """w + mu * u. Returns (perturbed_tree, u_tree)."""
+        return zoo.perturb(w, key, self.mu, self.direction)
+
+    def coefficient(self, f_plus, f_base):
+        """[f(w + mu u) - f(w)] / mu — the only derived scalar a party
+        ever forms from remote data."""
+        return zoo.zo_coefficient(f_plus, f_base, self.mu)
+
+    def party_gradient(self, w_m, key, f_base, f_of):
+        """The party-side estimate: K-direction averaged or seed-replay.
+
+        ``f_of(w_pert)`` evaluates the full objective at the perturbed
+        block — it hides one (c_hat up, h_bar down) round trip plus the
+        party's private regularizer. ``f_base`` is the unperturbed value
+        (h + lam * g(w_m)). Returns the ZO gradient tree.
+        """
+        def one(k):
+            w_p, u = self.perturb(w_m, k)
+            coeff = self.coefficient(f_of(w_p), f_base)
+            return zoo.zo_gradient(u, coeff)
+
+        K = self.num_directions
+        if K == 1 and self.seed_replay:
+            # MeZO-style: keep only the scalar coefficient; regenerate u
+            # at the update site (fused-kernel path on TPU).
+            w_p, _ = self.perturb(w_m, key)
+            coeff = self.coefficient(f_of(w_p), f_base)
+            return zoo.zo_gradient_from_seed(key, w_m, self.direction, coeff)
+        if K == 1:
+            return one(key)
+        gs = jax.vmap(one)(jax.random.split(key, K))
+        return jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
+
+    # ---- update apply (Algorithm 1 line 7 / Eq. 15) ----------------------
+    def apply_block(self, stacked, m, g, lr: float):
+        """In-place-style block-coordinate update of party m inside the
+        stacked (q, ...) parameter tree."""
+        return jax.tree.map(
+            lambda a, gg: a.at[m].add((-lr * gg).astype(a.dtype)),
+            stacked, g)
+
+    def apply_direction(self, w, u, coeff, lr: float):
+        """Dense update from a materialized direction: w - lr * coeff * u."""
+        return jax.tree.map(
+            lambda a, d: (a - lr * coeff * d).astype(a.dtype), w, u)
+
+    def apply_from_seed(self, w, key, coeff, lr: float):
+        """Seed-replay update: regenerate u from ``key``; never store it."""
+        return zoo.apply_zo_update(w, key, self.direction, coeff, lr)
+
+    def apply_fused(self, w, key, coeff, lr: float, *,
+                    interpret: bool = True):
+        """Fused kernels/zo_update path (Rademacher directions only): the
+        per-leaf sign bits regenerate from the same per-leaf keys
+        ``direction_tree`` uses, so this is bit-compatible with
+        apply_from_seed(direction='rademacher')."""
+        assert self.direction == "rademacher", \
+            "the fused kernel derives u from sign bits (Rademacher law)"
+        leaves, treedef = jax.tree.flatten(w)
+        keys = jax.random.split(key, len(leaves))
+        bits = jax.tree.unflatten(
+            treedef, [jax.random.bits(k, leaf.shape, jnp.uint32)
+                      for k, leaf in zip(keys, leaves)])
+        scale = jnp.asarray(lr * coeff, jnp.float32)
+        return kernel_ops.zo_update(w, bits, scale, interpret=interpret)
+
+    # ---- server side (Algorithm 1 lines 9-11 / Eq. 17) -------------------
+    def server_update(self, w0, key, f_base, f_of, lr: float):
+        """The server's own two-point estimate and update. ``f_of(w0p)``
+        re-evaluates F_0 on the SAME received c table — no extra up-link."""
+        w0p, u0 = self.perturb(w0, key)
+        coeff = self.coefficient(f_of(w0p), f_base)
+        g0 = zoo.zo_gradient(u0, coeff)
+        return jax.tree.map(
+            lambda a, g: (a - lr * g).astype(a.dtype), w0, g0)
+
+    # ---- accounting -------------------------------------------------------
+    def round_comms(self, c) -> RoundComms:
+        """Measured per-round transport for one party round with payload
+        shaped like ``c``: the base c plus one c_hat per direction go up;
+        h plus one h_bar per direction come down. Shape-derived, so usable
+        from inside jit-compiled paths where a Python meter cannot run."""
+        K = self.num_directions
+        return RoundComms((1 + K) * self.codec.nbytes(c),
+                          (1 + K) * SCALAR_BYTES)
+
+    # Instances hash by semantics so they can ride in jit static args.
+    def _hash_key(self):
+        return (self.mu, self.direction, self.lam, self.num_directions,
+                self.seed_replay, self.codec.name)
+
+    def __hash__(self):
+        return hash(self._hash_key())
+
+    def __eq__(self, other):
+        return (type(other) is ZOExchange
+                and self._hash_key() == other._hash_key())

@@ -115,6 +115,14 @@ class VFLModel:
         """Swap party m's column in the stacked c tensor (B, q, ...)."""
         return cs.at[:, m].set(c_new.astype(cs.dtype))
 
+    def map_party_outputs(self, cs, fn):
+        """Apply fn(c_m, m) to each party's block of the stacked c tensor
+        independently — the per-MESSAGE granularity of the wire protocol
+        (each party uploads its own c vector; a codec must see one
+        message at a time, not the joint table)."""
+        return jnp.stack([fn(cs[:, m], m)
+                          for m in range(self.num_parties)], axis=1)
+
     # batch adapters (overridden by TransformerVFLModel)
     def party_args(self, batch):
         return batch["x"]
@@ -271,6 +279,10 @@ class TransformerVFLModel(VFLModel):
 
     def replace_party_output(self, cs, c_new, m):
         return cs.at[:, :, m].set(c_new.astype(cs.dtype))   # (B,S,q,dq)
+
+    def map_party_outputs(self, cs, fn):
+        return jnp.stack([fn(cs[:, :, m], m)                # (B,S,dq) each
+                          for m in range(self.num_parties)], axis=2)
 
     def party_args(self, batch):
         return batch["tokens"]

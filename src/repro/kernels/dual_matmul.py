@@ -28,11 +28,14 @@ def _kernel(x_ref, w_ref, u_ref, y0_ref, y1_ref, acc0_ref, acc1_ref, *,
         acc0_ref[...] = jnp.zeros_like(acc0_ref)
         acc1_ref[...] = jnp.zeros_like(acc1_ref)
 
-    x = x_ref[...]
-    w = w_ref[...]
-    u = u_ref[...]
+    # f32 operands + f32 accumulators: bf16 inputs would otherwise lose
+    # the mu*u perturbation (|mu*u| << |w| vs bf16's ~8-bit mantissa) and
+    # round per-tile partial products
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
     acc0_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
-    acc1_ref[...] += jnp.dot(x, w + mu * u.astype(w.dtype),
+    acc1_ref[...] += jnp.dot(x, w + mu * u,
                              preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_k - 1)

@@ -45,10 +45,12 @@ def zo_update(params, bits_tree, scale, *, interpret: bool = True):
         if pad:
             flat = jnp.pad(flat, (0, pad))
             bits = jnp.pad(bits.reshape(-1), (0, pad))
+        # the kernel grid needs block | padded length; padded is always a
+        # multiple of 256, so fall back to 256 when 1024 doesn't divide it
+        block = 1024 if flat.shape[0] % 1024 == 0 else 256
         out = zo_update_pallas(flat, bits.reshape(-1).astype(jnp.uint32),
                                jnp.asarray(scale, jnp.float32),
-                               block=min(1024, flat.shape[0]),
-                               interpret=interpret)
+                               block=block, interpret=interpret)
         return out[:n].reshape(w.shape)
 
     return jax.tree.map(one, params, bits_tree)

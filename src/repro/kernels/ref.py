@@ -7,10 +7,10 @@ import numpy as np
 
 
 def dual_matmul_ref(x, w, u, *, mu: float):
+    # match kernel arithmetic: f32 operands, perturbation added in f32
     x32 = x.astype(jnp.float32)
     w32 = w.astype(jnp.float32)
-    # match kernel arithmetic: perturbation added in w's dtype
-    wp = (w + mu * u.astype(w.dtype)).astype(jnp.float32)
+    wp = w32 + mu * u.astype(jnp.float32)
     y0 = jnp.dot(x32, w32).astype(x.dtype)
     y1 = jnp.dot(x32, wp).astype(x.dtype)
     return y0, y1

@@ -8,6 +8,7 @@
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, VFLConfig
 from repro.core import asyrevel
+from repro.core.exchange import ZOExchange
 from repro.core.vfl import TransformerVFLModel
 from repro.models.model import Model
 from repro.optim.optimizers import adam_init, adam_update
@@ -88,14 +90,21 @@ def make_serve_step(model: Model):
     return serve_step
 
 
-def make_vfl_zoo_step(model: Model, vfl: VFLConfig):
-    """The paper's AsyREVEL iteration wrapping this architecture as F_0."""
+def make_vfl_zoo_step(model: Model, vfl: VFLConfig, codec: str | None = None):
+    """The paper's AsyREVEL iteration wrapping this architecture as F_0.
+
+    The two-point message round routes through one shared
+    core/exchange.py ZOExchange; `codec` (default: vfl.codec) picks the
+    up-link payload format for the c values (f32 | bf16 | int8)."""
+    if codec is not None:
+        vfl = dataclasses.replace(vfl, codec=codec)
     vm = TransformerVFLModel(model, vfl)
+    ex = ZOExchange.from_config(vfl)
 
     def init(key):
         return asyrevel.init_state(vm, vfl, key)
 
     def step(state, batch):
-        return asyrevel.asyrevel_step(vm, vfl, state, batch)
+        return asyrevel.asyrevel_step(vm, vfl, state, batch, ex)
 
     return vm, init, step

@@ -1,26 +1,31 @@
 """Zeroth-order SGD over a whole pytree — the centralized (NonF) training
 path and the building block the AsyREVEL party update specializes.
 
-Supports multi-sample direction averaging (variance reduction the paper
-points to via Liu et al. 2018) and seed-replay (no materialized u).
+The two-point round (perturb -> coefficient -> seed-replay apply) is the
+same core/exchange.py ZOExchange the VFL trainers use; this module is the
+degenerate single-party case where "the server" is the local loss_fn and
+nothing crosses a wire. Supports multi-sample direction averaging
+(variance reduction the paper points to via Liu et al. 2018) and
+seed-replay (no materialized u).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import zoo
+from repro.core.exchange import ZOExchange
 
 
 def zo_sgd_step(loss_fn, params, key, lr: float, mu: float,
                 dist: str = "gaussian", num_directions: int = 1):
     """params <- params - lr * mean_k coeff_k u_k. Returns (params, loss)."""
+    ex = ZOExchange(mu=mu, direction=dist, num_directions=num_directions,
+                    seed_replay=True)
     f0 = loss_fn(params)
 
     def one(k):
-        pert, u = zoo.perturb(params, k, mu, dist)
-        coeff = zoo.zo_coefficient(loss_fn(pert), f0, mu)
-        return coeff
+        pert, _ = ex.perturb(params, k)
+        return ex.coefficient(loss_fn(pert), f0)
 
     keys = jax.random.split(key, num_directions)
     coeffs = jax.vmap(one)(keys) if num_directions > 1 else \
@@ -28,9 +33,6 @@ def zo_sgd_step(loss_fn, params, key, lr: float, mu: float,
     # seed-replay accumulate (u regenerated; never stored across directions)
     new = params
     for i in range(num_directions):
-        g = zoo.zo_gradient_from_seed(keys[i], params, dist,
-                                      coeffs[i] / num_directions)
-        new = jax.tree.map(
-            lambda p, gi: (p.astype(jnp.float32) - lr * gi).astype(p.dtype),
-            new, g)
+        new = ex.apply_from_seed(new, keys[i], coeffs[i] / num_directions,
+                                 lr)
     return new, f0

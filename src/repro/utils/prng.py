@@ -23,11 +23,15 @@ def key_iter(key):
 def sample_direction(key, shape, dist: str, dtype=jnp.float32):
     """Random direction u for the two-point estimator.
 
-    dist='gaussian': u ~ N(0, I)           (AsyREVEL-Gau)
-    dist='uniform' : u ~ Unif(S^{d-1})·√d  (AsyREVEL-Uni; the √d keeps E||u||²=d,
-                     matching the Gaussian normalization so Eq.(15)'s d_m/μ_m
-                     prefactor is shared — the paper's two theorems differ only
-                     in the d_* constant.)
+    dist='gaussian'  : u ~ N(0, I)           (AsyREVEL-Gau)
+    dist='uniform'   : u ~ Unif(S^{d-1})·√d  (AsyREVEL-Uni; the √d keeps E||u||²=d,
+                       matching the Gaussian normalization so Eq.(15)'s d_m/μ_m
+                       prefactor is shared — the paper's two theorems differ only
+                       in the d_* constant.)
+    dist='rademacher': u_i = ±1 (E[uu^T] = I — a valid two-point law, beyond
+                       paper). Signs derive from the low bit of the on-chip
+                       PRNG stream, bit-compatible with kernels/zo_update's
+                       fused seed-replay path (ZOExchange.apply_fused).
     """
     if dist == "gaussian":
         return jax.random.normal(key, shape, dtype)
@@ -36,4 +40,7 @@ def sample_direction(key, shape, dist: str, dtype=jnp.float32):
         d = g.size
         u = g / (jnp.linalg.norm(g.reshape(-1)) + 1e-12) * jnp.sqrt(float(d))
         return u.astype(dtype)
+    elif dist == "rademacher":
+        bits = jax.random.bits(key, shape, jnp.uint32)
+        return jnp.where((bits & 1) == 1, 1.0, -1.0).astype(dtype)
     raise ValueError(f"unknown direction distribution: {dist}")

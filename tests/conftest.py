@@ -9,6 +9,97 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+# --------------------------------------------------------------------------
+# hypothesis fallback shim.
+#
+# Several test modules property-test with hypothesis (`given`/`settings`/
+# `strategies`). hypothesis is a declared dev dependency (pyproject.toml)
+# and CI installs the real thing — but when it is absent (this container
+# image doesn't bake it in) the modules must still collect and run, so we
+# install a minimal deterministic stand-in BEFORE they import it: each
+# @given test runs `max_examples` times on boundary values first (min/max
+# of every strategy — the edges real hypothesis probes hardest) and then
+# seeded-random draws. No shrinking, no database — just honest coverage
+# of the declared input space.
+# --------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import random as _random
+    import types as _types
+
+    class _Strategy:
+        def __init__(self, sample, boundaries):
+            self.sample = sample
+            self.boundaries = list(boundaries)
+
+    def _st_integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value),
+                         [min_value, max_value])
+
+    def _st_floats(min_value, max_value, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value),
+                         [min_value, max_value])
+
+    def _st_booleans():
+        return _Strategy(lambda r: r.random() < 0.5, [False, True])
+
+    def _st_sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements),
+                         [elements[0], elements[-1]])
+
+    def _settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def _given(**strategies):
+        names = sorted(strategies)
+
+        def deco(fn):
+            # metadata copied by hand: functools.wraps would set
+            # __wrapped__ and make pytest see the strategy params as
+            # fixture requests
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples", 10)
+                rng = _random.Random(0xA5A5)
+                n_bound = max(len(s.boundaries)
+                              for s in strategies.values())
+                for i in range(n):
+                    if i < n_bound:      # boundary sweep first
+                        draw = {k: strategies[k].boundaries[
+                            min(i, len(strategies[k].boundaries) - 1)]
+                            for k in names}
+                    else:
+                        draw = {k: strategies[k].sample(rng)
+                                for k in names}
+                    fn(*args, **draw, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._shim_max_examples = getattr(
+                fn, "_shim_max_examples", 10)
+            return wrapper
+        return deco
+
+    _hyp = _types.ModuleType("hypothesis")
+    _hyp.__doc__ = "deterministic fallback shim (see tests/conftest.py)"
+    _strat = _types.ModuleType("hypothesis.strategies")
+    _strat.integers = _st_integers
+    _strat.floats = _st_floats
+    _strat.booleans = _st_booleans
+    _strat.sampled_from = _st_sampled_from
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _strat
+    _hyp.assume = lambda cond: True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _strat
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
