@@ -1,10 +1,22 @@
 """Paper Fig. 4: q-party speedup of AsyREVEL vs SynREVEL with the thread
 executor (sleep-modelled party compute so wall-clock parallelism is real;
-one party is a 40% straggler, as in the paper's setup)."""
+one party is a 40% straggler, as in the paper's setup) — plus the
+devices x parties sweep of the SHARDED device trainer: step throughput of
+core/asyrevel.train_sharded at 1/2/4 CPU host devices, measured on real
+parallel hardware rather than a sleep model.
+
+Each device count runs in its own subprocess because
+--xla_force_host_platform_device_count must be set before jax initializes
+(``python -m benchmarks.bench_speedup --worker`` is that subprocess)."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -16,6 +28,19 @@ from repro.data.synthetic import make_paper_dataset
 TOTAL_UPDATES = 240
 COST = 10e-3           # simulated per-update local compute (constant per
 #                        block update; paper Fig 4 counts block updates)
+
+# device sweep: paper-LR model, wide enough that per-step compute (gather
+# + q party matvecs at batch 256) dominates the scalar psum latency.
+# K=4 batched directions exercise the fused multi-direction upload (the
+# K c_hat evaluations lower to ONE (B, d/q) x (d/q, K) matmul per step).
+# Device-parallel scaling requires >= as many physical cores as devices;
+# a 2-core container tops out near 1.3-1.4x regardless of device count.
+SWEEP_BATCH = 256
+SWEEP_FEATURES = 16384
+SWEEP_DIRECTIONS = 4
+SWEEP_STEPS = 40
+SWEEP_PARTIES = (4, 8)
+SWEEP_DEVICES = (1, 2, 4)
 
 
 def _run_q(q, X, y, d, algorithm):
@@ -35,6 +60,82 @@ def _run_q(q, X, y, d, algorithm):
     return time.perf_counter() - t0
 
 
+def _sweep_worker(batch: int, steps: int, d: int, q: int) -> dict:
+    """Runs inside the per-device-count subprocess: time the sharded
+    trainer's warm scan (compile excluded — the jitted fn is built once
+    and called twice) on ALL devices this process sees."""
+    from repro.core import asyrevel
+    from repro.data.synthetic import make_classification
+
+    dp = jax.device_count()
+    X, y = make_classification(2 * batch, d, seed=0)
+    data = {"x": pad_features(jnp.asarray(X), d, q), "y": jnp.asarray(y)}
+    model = PaperLRModel(PaperLRConfig(num_features=d, num_parties=q))
+    # lr scaled for the wide block: the coefficient multiplies a ~sqrt(d)
+    # norm direction, so the paper's 5e-2 diverges at d=16384
+    vfl = VFLConfig(num_parties=q, mu=1e-3, lr_party=1e-3,
+                    lr_server=1e-3 / q,
+                    num_directions=SWEEP_DIRECTIONS)
+    mesh = jax.make_mesh((dp,), ("data",))
+    fn = asyrevel.make_sharded_train_fn(model, vfl, len(y), batch,
+                                        mesh=mesh)
+    state = asyrevel.init_state(model, vfl, jax.random.key(0))
+    keys = jax.random.split(jax.random.key(7), steps)
+    jax.block_until_ready(fn(state, keys, data))        # compile + warm
+    best = float("inf")
+    for _ in range(3):            # best-of-3: the 2-core container's
+        t0 = time.perf_counter()  # scheduler noise dwarfs the variance
+        _, losses = fn(state, keys, data)
+        jax.block_until_ready(losses)
+        best = min(best, time.perf_counter() - t0)
+    return {"devices": dp, "parties": q, "batch": batch, "steps": steps,
+            "steps_per_s": steps / best,
+            "loss_finite": bool(np.isfinite(np.asarray(losses)).all())}
+
+
+def _spawn_sweep(devices: int, q: int):
+    env = dict(os.environ)
+    kept = [f for f in env.get("XLA_FLAGS", "").split()
+            if "xla_force_host_platform_device_count" not in f]
+    env["XLA_FLAGS"] = " ".join(
+        kept + [f"--xla_force_host_platform_device_count={devices}"])
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_speedup", "--worker",
+         str(SWEEP_BATCH), str(SWEEP_STEPS), str(SWEEP_FEATURES), str(q)],
+        env=env, cwd=root, capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"sweep worker failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def device_sweep():
+    """Devices x parties throughput of the sharded device trainer."""
+    rows = []
+    for q in SWEEP_PARTIES:
+        base = None
+        for dev in SWEEP_DEVICES:
+            try:
+                r = _spawn_sweep(dev, q)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                rows.append((f"fig4_device_throughput_q{q}_dev{dev}", 0.0,
+                             f"error={type(e).__name__}"))
+                continue
+            sps = r["steps_per_s"]
+            base = sps if dev == 1 else base
+            # no float-parseable NaN: it would survive into the JSON
+            # artifact and break strict parsers
+            speedup = f"{sps / base:.2f}" if base else "na"
+            rows.append((
+                f"fig4_device_throughput_q{q}_dev{dev}", 1e6 / sps,
+                f"devices={dev};parties={q};batch={r['batch']};"
+                f"steps_per_s={sps:.2f};speedup_vs_1dev={speedup};"
+                f"ideal={dev};finite={r['loss_finite']}"))
+    return rows
+
+
 def run():
     (X, y), spec = make_paper_dataset("D5_w8a", scale=0.02)
     rows = []
@@ -48,9 +149,14 @@ def run():
             speedup = t1 / tq
             rows.append((f"fig4_speedup_{algorithm}_q{q}", tq * 1e6,
                          f"speedup={speedup:.2f};ideal={q}"))
+    rows.extend(device_sweep())
     return rows
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
-        print(f"{name},{us:.1f},{derived}")
+    if len(sys.argv) > 1 and sys.argv[1] == "--worker":
+        batch, steps, d, q = map(int, sys.argv[2:6])
+        print(json.dumps(_sweep_worker(batch, steps, d, q)))
+    else:
+        for name, us, derived in run():
+            print(f"{name},{us:.1f},{derived}")

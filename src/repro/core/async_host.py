@@ -108,16 +108,27 @@ class _Server:
     are the real wire sizes."""
 
     def __init__(self, model: VFLModel, vfl: VFLConfig, n: int, key,
-                 ex: ZOExchange):
+                 ex: ZOExchange, pert_key):
         self.model = model
         self.vfl = vfl
         self.ex = ex
         self.lock = threading.Lock()
         self.w0 = model.init_server(key)
+        # the server's own perturbation stream derives from the TRAINER
+        # seed (folded per update in handle) — a constant base key here
+        # would replay the identical direction sequence for every seed
+        self.pert_key = pert_key
         # latest function value of each party on each sample ("received
         # previously", Algorithm 1) — warm-started to zeros.
         self.c_table = np.zeros((n, model.num_parties), np.float32)
         self.losses = HostRunResult(comms=ex.meter)
+        # update-budget claims (run_async): taken under self.lock BEFORE a
+        # party starts its round, so a run does exactly total_updates
+        # updates instead of racing past the budget by up to q-1 rounds
+        self.claimed = 0
+        # re-stamped by HostAsyncTrainer at run start so history holds
+        # run-relative wall-clock (construction-time stamping counted jit
+        # warm-up into Fig 3/4's time-to-loss)
         self.t0 = time.perf_counter()
 
     def handle(self, m: int, idx: np.ndarray, wire_c, wire_c_hat,
@@ -134,7 +145,7 @@ class _Server:
             cs = jnp.asarray(self.c_table[idx])          # stale others
             cs_hat = cs.at[:, m].set(c_hat)
             y = self.y[idx]
-            key = jax.random.key(self.losses.updates)
+            key = jax.random.fold_in(self.pert_key, self.losses.updates)
             with _JAX_LOCK:
                 h, h_bar, w0 = _serve_jit(self.model, self.vfl, self.w0,
                                           cs, cs_hat, y, key)
@@ -164,11 +175,46 @@ class HostAsyncTrainer:
         self.seed = seed
         self.exchange = ZOExchange.from_config(vfl, meter=CommsMeter())
         q = model.num_parties
-        keys = jax.random.split(jax.random.key(seed), q + 1)
+        keys = jax.random.split(jax.random.key(seed), q + 2)
         self.server = _Server(model, vfl, len(self.y), keys[0],
-                              self.exchange)
+                              self.exchange, pert_key=keys[q + 1])
         self.server.y = jnp.asarray(self.y)
         self.party_w = [model.init_party(keys[m + 1], m) for m in range(q)]
+        self._spent = False
+
+    def _warm_jits(self):
+        """Execute every per-(shape, party) jit once on dummy data so the
+        compiles land BEFORE the run clock starts — re-stamping t0 alone
+        would still leak the first round's compile time into
+        history[0]."""
+        vfl, q = self.vfl, self.model.num_parties
+        idx = np.arange(self.batch_size) % len(self.y)
+        key = jax.random.key(0)
+        with _JAX_LOCK:
+            cs = jnp.asarray(self.server.c_table[idx])
+            y = self.server.y[idx]
+            for m in range(q):
+                x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
+                c, c_hat, _, _, u = _party_fused_jit(
+                    self.model, vfl, self.party_w[m], x_m, key, m)
+                if m == 0:      # party blocks share structure/shapes
+                    _serve_jit(self.model, vfl, self.server.w0, cs,
+                               cs.at[:, m].set(c_hat), y, key)
+                    _party_apply_jit(vfl, self.party_w[m], u, 0.0)
+
+    def _start_run(self):
+        """Arm one run: history timestamps are RUN-relative (everything
+        before the first real round — jit compiles, data device-puts —
+        must not pollute Fig 3/4's time-to-loss), and a trainer only runs
+        once (its optimizer state, c table, and meters are mid-trajectory
+        after a run; reusing them silently would corrupt comparisons)."""
+        if self._spent:
+            raise RuntimeError(
+                "this HostAsyncTrainer already ran; construct a fresh one "
+                "(history/meters are run-relative)")
+        self._spent = True
+        self._warm_jits()
+        self.server.t0 = time.perf_counter()
 
     # ---- one party-side round (shared by both executors) ----------------
     def party_step(self, m: int, idx: np.ndarray, key):
@@ -202,17 +248,29 @@ class HostAsyncTrainer:
         key = jax.random.key(rng.integers(1 << 31))
         self.party_step(m, idx, key)
 
+    def _claim_update(self, total_updates: int) -> bool:
+        """Reserve one unit of the global update budget under the server
+        lock. Checking ``losses.updates`` unlocked let all q parties pass
+        the gate at updates == total-1 and overshoot by up to q-1 rounds;
+        a claim is taken BEFORE the round starts, so exactly
+        ``total_updates`` rounds ever begin."""
+        with self.server.lock:
+            if self.server.claimed >= total_updates:
+                return False
+            self.server.claimed += 1
+            return True
+
     def run_async(self, total_updates: int) -> HostRunResult:
         """Parties run until the GLOBAL update budget is spent — fast
         parties naturally contribute more rounds (this is precisely why
         async wins with stragglers: nobody waits)."""
+        self._start_run()
         q = self.model.num_parties
         threads = []
 
         def loop(m):
             rng = np.random.default_rng(self.seed * 97 + m)
-            # GIL-atomic int read: no lock needed to check the budget
-            while self.server.losses.updates < total_updates:
+            while self._claim_update(total_updates):
                 self._party_update(m, rng)
 
         for m in range(q):
@@ -227,6 +285,7 @@ class HostAsyncTrainer:
     def run_sync(self, rounds: int) -> HostRunResult:
         """Barrier per round: parties run concurrently but the round only
         finishes when the slowest party (the straggler) does."""
+        self._start_run()
         q = self.model.num_parties
         rngs = [np.random.default_rng(self.seed * 97 + m) for m in range(q)]
         for _ in range(rounds):

@@ -108,11 +108,16 @@ def asyrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch,
     reg0 = model.regularizer(w_m)
 
     # one or several directions (num_directions > 1 = variance-reduced
-    # averaging, beyond-paper; each direction costs one extra (c_hat,
-    # h_bar) round trip — still only function values)
-    def f_of(w_m_pert):
+    # averaging, beyond-paper). K directions are ONE batched round: the
+    # exchange stacks the K perturbed blocks and vmaps this closure, so
+    # the K c_hat uploads fuse into a single multi-direction dispatch —
+    # still only function values. k_dir is the direction's own subkey;
+    # folding it into the codec key gives each upload an INDEPENDENT
+    # stochastic-rounding draw (shared noise would defeat the K-direction
+    # variance reduction).
+    def f_of(w_m_pert, k_dir):
         c_hat = model.party_forward(w_m_pert, x_m, m_t)
-        c_hat = ex.roundtrip_up(c_hat, fold_name(key, "codec_hat"))
+        c_hat = ex.roundtrip_up(c_hat, fold_name(k_dir, "codec_hat"))
         cs_hat = model.replace_party_output(cs, c_hat, m_t)
         h_bar = model.server_forward(state.w0, cs_hat, y)   # h-bar_{i,m}
         return h_bar + vfl.lam * model.regularizer(w_m_pert)
@@ -158,10 +163,12 @@ def synrevel_step(model: VFLModel, vfl: VFLConfig, state: AsyState, batch,
         k_u = fold_name(key, f"u{m}")
         w_m = _gather_party(state.parties, m)
 
-        def f_of(w_m_pert, m=m):
+        def f_of(w_m_pert, k_dir, m=m):
             c_hat = model.party_forward(
                 w_m_pert, model.slice_features(x, m), m)
-            c_hat = ex.roundtrip_up(c_hat, fold_name(key, f"codec_hat{m}"))
+            # k_dir already encodes the party (derived from k_u) AND the
+            # direction, so every upload gets its own rounding draw
+            c_hat = ex.roundtrip_up(c_hat, fold_name(k_dir, "codec_hat"))
             h_bar = model.server_forward(
                 state.w0, model.replace_party_output(cs, c_hat, m), y)
             return h_bar + vfl.lam * model.regularizer(w_m_pert)
@@ -203,3 +210,166 @@ def train(model: VFLModel, vfl: VFLConfig, data, key, steps: int,
     keys = jax.random.split(jax.random.fold_in(key, 7), steps)
     state, losses = jax.lax.scan(body, state, keys)
     return state, losses
+
+
+# ------------------------------------------------- sharded scale path -----
+
+class PmeanVFLModel:
+    """Data-parallel view of a VFLModel inside a ``shard_map`` body.
+
+    Every method delegates to the wrapped model; only ``server_forward``
+    changes — it returns the GLOBAL batch-mean loss via ``lax.pmean``
+    over the data axis, so the two-point coefficients every party (and
+    the server) forms are identical on all devices and the replicated
+    parameter trees stay bitwise in sync without any parameter
+    collectives. The c values themselves never cross devices: each shard
+    uploads its own slice of the batch and only the scalar losses are
+    psum-reduced — the same function-values-only boundary, now also the
+    only cross-DEVICE traffic (see docs/scale.md).
+    """
+
+    def __init__(self, inner: VFLModel, axis_name: str):
+        self.inner = inner
+        self.axis_name = axis_name
+        self.num_parties = inner.num_parties
+
+    def server_forward(self, w0, cs, y):
+        return jax.lax.pmean(self.inner.server_forward(w0, cs, y),
+                             self.axis_name)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def _hash_key(self):
+        return (type(self).__name__, self.inner._hash_key(), self.axis_name)
+
+    def __hash__(self):
+        return hash(self._hash_key())
+
+    def __eq__(self, other):
+        return (type(other) is PmeanVFLModel
+                and self._hash_key() == other._hash_key())
+
+
+class ShardFoldedExchange(ZOExchange):
+    """ZOExchange for a shard_map body with dp > 1: folds the device's
+    data-axis index into the codec rounding key, so the dp per-shard
+    slices of one upload carry INDEPENDENT stochastic-rounding draws —
+    the per-direction independence fix, applied along the shard axis
+    (the replicated step key would otherwise hand every shard the same
+    noise realization). Only constructed for dp > 1: fold_in(key, 0) is
+    not the identity, so using it on a 1-device mesh would break the
+    bit-parity with the single-device scan."""
+
+    def __init__(self, base: ZOExchange, axis_name: str):
+        super().__init__(mu=base.mu, direction=base.direction,
+                         lam=base.lam, num_directions=base.num_directions,
+                         seed_replay=base.seed_replay, codec=base.codec,
+                         meter=None)
+        self.axis_name = axis_name
+
+    def _codec_key(self, key):
+        if key is None:
+            return None
+        return jax.random.fold_in(key, jax.lax.axis_index(self.axis_name))
+
+    def _hash_key(self):
+        return (type(self).__name__, self.axis_name,
+                super()._hash_key())
+
+
+def shard_wrap(model: VFLModel, ex: ZOExchange, mesh,
+               data_axis: str = "data"):
+    """The one place the sharded-body wrapping is decided: returns
+    ``(pmodel, ex, dp)`` — the pmean model view and, ONLY when the data
+    axis is wider than one device, the shard-folded exchange. The dp > 1
+    gate is load-bearing: fold_in(key, 0) is not the identity, so
+    wrapping on a 1-device mesh would break bit-parity with the
+    single-device scan. Both sharded entry points
+    (``make_sharded_train_fn`` and ``launch/steps.make_vfl_zoo_step``)
+    call this so they cannot diverge."""
+    dp = dict(zip(mesh.axis_names, mesh.devices.shape))[data_axis]
+    if dp > 1:
+        ex = ShardFoldedExchange(ex, data_axis)
+    return PmeanVFLModel(model, data_axis), ex, dp
+
+
+def make_sharded_train_fn(model: VFLModel, vfl: VFLConfig, n: int,
+                          batch_size: int, algorithm: str = "asyrevel",
+                          mesh=None, data_axis: str = "data"):
+    """Build the jitted data-parallel scan: ``fn(state, keys, data) ->
+    (state, losses)`` with the per-step batch sharded over ``mesh``'s
+    ``data`` axis. Returned separately from ``train_sharded`` so repeat
+    callers (throughput benches) reuse one compiled executable. ``n`` is
+    the dataset's sample count (index-draw range)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.ctx import suspend_constraints
+    from repro.sharding.rules import replicated_pspecs
+
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(),), (data_axis,))
+    step_fn = asyrevel_step if algorithm == "asyrevel" else synrevel_step
+    pmodel, ex, dp = shard_wrap(model, ZOExchange.from_config(vfl), mesh,
+                                data_axis)
+    assert batch_size % dp == 0, \
+        f"batch_size={batch_size} must divide over {data_axis}={dp}"
+    local_b = batch_size // dp
+
+    def scan_fn(state, keys, data):
+        # traced INSIDE shard_map: with_sharding_constraint is invalid in
+        # manual-mesh bodies, so ambient activation constraints suspend
+        with suspend_constraints():
+            def body(state, k):
+                # the GLOBAL index draw is replicated (same key on every
+                # device); each shard then takes its own contiguous slice
+                idx = jax.random.randint(k, (batch_size,), 0, n)
+                r = jax.lax.axis_index(data_axis)
+                idx = jax.lax.dynamic_slice_in_dim(
+                    idx, r * local_b, local_b)
+                batch = jax.tree.map(lambda a: a[idx], data)
+                return step_fn(pmodel, vfl, state, batch, ex)
+
+            return jax.lax.scan(body, state, keys)
+
+    rep = replicated_pspecs
+
+    def sharded(state, keys, data):
+        return shard_map(
+            scan_fn, mesh=mesh,
+            in_specs=(rep(state), P(), rep(data)),
+            out_specs=(rep(state), P()),
+            check_rep=False)(state, keys, data)
+
+    return jax.jit(sharded)
+
+
+def train_sharded(model: VFLModel, vfl: VFLConfig, data, key, steps: int,
+                  batch_size: int, algorithm: str = "asyrevel", mesh=None,
+                  data_axis: str = "data"):
+    """Data-parallel ``train``: the per-step batch shards over ``mesh``'s
+    ``data`` axis, the server loss is psum-reduced to the global batch
+    mean, and party/server params stay replicated (the ZO update is a
+    deterministic function of the replicated keys + the pmean'd scalars,
+    so no parameter collective is ever needed).
+
+    On a 1-device mesh this is bit-identical to ``train`` with the same
+    seed: the batch indices, perturbation keys, and update order are
+    byte-for-byte the same schedule, and pmean over a singleton axis is
+    the identity. On dp devices the only numeric difference is the
+    fp-reassociation of the batch mean (mean of dp shard-means).
+
+    Lossy up-link codecs quantize per (message, shard): each device's
+    slice of a party upload is its own wire tensor with its own absmax
+    scale AND its own rounding key (ShardFoldedExchange folds the shard
+    index in when dp > 1) — the per-MESSAGE granularity of the protocol,
+    refined to the independent per-shard messages a data-parallel party
+    would actually send.
+    """
+    n = jax.tree.leaves(data)[0].shape[0]
+    fn = make_sharded_train_fn(model, vfl, n, batch_size, algorithm, mesh,
+                               data_axis)
+    state = init_state(model, vfl, key)
+    keys = jax.random.split(jax.random.fold_in(key, 7), steps)
+    return fn(state, keys, data)

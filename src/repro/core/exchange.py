@@ -205,9 +205,16 @@ class ZOExchange:
                    codec=getattr(vfl, "codec", "f32"), meter=meter)
 
     # ---- wire: party -> server (Algorithm 1 line 5) ----------------------
+    def _codec_key(self, key):
+        """Hook: the rounding key a stochastic codec actually uses.
+        Identity here; the sharded trainer's subclass folds the device's
+        data-axis index in so per-shard messages draw independent
+        rounding noise (core/asyrevel.ShardFoldedExchange)."""
+        return key
+
     def encode_up(self, c, key=None):
         """Party side: function values -> wire payload (+ measured bytes)."""
-        wire = self.codec.encode(c, key)
+        wire = self.codec.encode(c, self._codec_key(key))
         if self.meter is not None:
             self.meter.add_up(wire_nbytes(wire))
         return wire
@@ -218,7 +225,7 @@ class ZOExchange:
 
     def roundtrip_up(self, c, key=None):
         """What the server sees after the up-link (identity for f32)."""
-        return self.codec.roundtrip(c, key)
+        return self.codec.roundtrip(c, self._codec_key(key))
 
     # ---- wire: server -> party (Algorithm 1 line 8) ----------------------
     def send_down(self, *fvals):
@@ -242,27 +249,39 @@ class ZOExchange:
     def party_gradient(self, w_m, key, f_base, f_of):
         """The party-side estimate: K-direction averaged or seed-replay.
 
-        ``f_of(w_pert)`` evaluates the full objective at the perturbed
-        block — it hides one (c_hat up, h_bar down) round trip plus the
-        party's private regularizer. ``f_base`` is the unperturbed value
-        (h + lam * g(w_m)). Returns the ZO gradient tree.
-        """
-        def one(k):
-            w_p, u = self.perturb(w_m, k)
-            coeff = self.coefficient(f_of(w_p), f_base)
-            return zoo.zo_gradient(u, coeff)
+        ``f_of(w_pert, k_dir)`` evaluates the full objective at the
+        perturbed block — it hides one (c_hat up, h_bar down) round trip
+        plus the party's private regularizer. ``k_dir`` is that
+        direction's OWN subkey: a stochastic up-link codec must fold it
+        into its rounding key so the K uploads carry independent rounding
+        noise (shared noise would break the K-direction variance
+        reduction). ``f_base`` is the unperturbed value (h + lam *
+        g(w_m)). Returns the ZO gradient tree.
 
+        K > 1 is evaluated as ONE batched round, not K sequential round
+        trips: all K perturbed blocks are stacked and ``f_of`` is vmapped
+        over the direction axis, so the K (c_hat up, h_bar down)
+        exchanges fuse into a single multi-direction dispatch.
+        """
         K = self.num_directions
         if K == 1 and self.seed_replay:
             # MeZO-style: keep only the scalar coefficient; regenerate u
             # at the update site (fused-kernel path on TPU).
             w_p, _ = self.perturb(w_m, key)
-            coeff = self.coefficient(f_of(w_p), f_base)
+            coeff = self.coefficient(f_of(w_p, key), f_base)
             return zoo.zo_gradient_from_seed(key, w_m, self.direction, coeff)
         if K == 1:
-            return one(key)
-        gs = jax.vmap(one)(jax.random.split(key, K))
-        return jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
+            w_p, u = self.perturb(w_m, key)
+            coeff = self.coefficient(f_of(w_p, key), f_base)
+            return zoo.zo_gradient(u, coeff)
+        keys = jax.random.split(key, K)
+        w_ps, us = jax.vmap(lambda k: self.perturb(w_m, k))(keys)
+        coeffs = jax.vmap(
+            lambda f: self.coefficient(f, f_base))(jax.vmap(f_of)(w_ps, keys))
+        return jax.tree.map(
+            lambda u: jnp.mean(
+                coeffs.reshape((K,) + (1,) * (u.ndim - 1)) * u, axis=0),
+            us)
 
     # ---- update apply (Algorithm 1 line 7 / Eq. 15) ----------------------
     def apply_block(self, stacked, m, g, lr: float):
@@ -326,5 +345,5 @@ class ZOExchange:
         return hash(self._hash_key())
 
     def __eq__(self, other):
-        return (type(other) is ZOExchange
+        return (type(other) is type(self)
                 and self._hash_key() == other._hash_key())

@@ -32,6 +32,18 @@ def make_host_mesh(model_parallel: int = 1):
                          ("data", "model"))
 
 
+def make_data_mesh(data_parallel: int | None = None):
+    """1-D ('data',) mesh for the sharded ZO-VFL trainer (batch data
+    parallelism only — party/server params replicate). Uses the first
+    `data_parallel` devices (default: all). On CPU, expose N host devices
+    with --xla_force_host_platform_device_count=N BEFORE jax initializes
+    (launch/train.py --data-parallel does this for you)."""
+    n = data_parallel or len(jax.devices())
+    assert n <= len(jax.devices()), \
+        f"asked for {n} devices, only {len(jax.devices())} exist"
+    return jax.make_mesh((n,), ("data",), devices=jax.devices()[:n])
+
+
 # hardware constants used by the roofline analysis (TPU v5e)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

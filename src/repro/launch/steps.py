@@ -90,12 +90,19 @@ def make_serve_step(model: Model):
     return serve_step
 
 
-def make_vfl_zoo_step(model: Model, vfl: VFLConfig, codec: str | None = None):
+def make_vfl_zoo_step(model: Model, vfl: VFLConfig, codec: str | None = None,
+                      mesh=None, data_axis: str = "data"):
     """The paper's AsyREVEL iteration wrapping this architecture as F_0.
 
     The two-point message round routes through one shared
     core/exchange.py ZOExchange; `codec` (default: vfl.codec) picks the
-    up-link payload format for the c values (f32 | bf16 | int8)."""
+    up-link payload format for the c values (f32 | bf16 | int8).
+
+    With `mesh`, the returned step is the sharded scale path: the batch
+    shards over the mesh's `data` axis (leading batch dim, replicated
+    when indivisible), the server loss psum-reduces to the global batch
+    mean, and party/server state replicates — bit-identical to the
+    unsharded step on a 1-device mesh (docs/scale.md)."""
     if codec is not None:
         vfl = dataclasses.replace(vfl, codec=codec)
     vm = TransformerVFLModel(model, vfl)
@@ -104,7 +111,28 @@ def make_vfl_zoo_step(model: Model, vfl: VFLConfig, codec: str | None = None):
     def init(key):
         return asyrevel.init_state(vm, vfl, key)
 
+    if mesh is None:
+        def step(state, batch):
+            return asyrevel.asyrevel_step(vm, vfl, state, batch, ex)
+        return vm, init, step
+
+    from jax.experimental.shard_map import shard_map
+
+    from repro.sharding.ctx import suspend_constraints
+    from repro.sharding.rules import batch_pspecs, replicated_pspecs
+
+    pm, ex_sharded, _ = asyrevel.shard_wrap(vm, ex, mesh, data_axis)
+
+    def body(state, batch):
+        with suspend_constraints():
+            return asyrevel.asyrevel_step(pm, vfl, state, batch, ex_sharded)
+
     def step(state, batch):
-        return asyrevel.asyrevel_step(vm, vfl, state, batch, ex)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(replicated_pspecs(state),
+                      batch_pspecs(batch, mesh, batch_axes=(data_axis,))),
+            out_specs=(replicated_pspecs(state), jax.sharding.PartitionSpec()),
+            check_rep=False)(state, batch)
 
     return vm, init, step

@@ -4,15 +4,50 @@
       --reduced --steps 200 --mode lm
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
       --reduced --steps 500 --mode vfl-zoo --parties 4
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --reduced --steps 200 --mode vfl-zoo --parties 4 --data-parallel 4
 
 Modes:
   lm       first-order Adam LM training (substrate baseline)
   vfl-zoo  the paper's AsyREVEL black-box VFL training of the same arch
+
+--data-parallel N runs the vfl-zoo step through the sharded scale path
+(launch/steps.py mesh=; docs/scale.md): batch sharded over a 1-D 'data'
+mesh, server loss psum-reduced, params replicated.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+# --data-parallel N on CPU needs N XLA host devices, and that must be
+# configured BEFORE jax initializes — so peek at argv before the jax
+# import (both '--data-parallel N' and '--data-parallel=N' forms;
+# malformed values fall through for argparse to report). No-op when jax
+# is already in (library use / tests) or the operator set the flag.
+def _peek_data_parallel(argv):
+    for i, a in enumerate(argv):
+        v = None
+        if a == "--data-parallel" and i + 1 < len(argv):
+            v = argv[i + 1]
+        elif a.startswith("--data-parallel="):
+            v = a.split("=", 1)[1]
+        if v is not None:
+            try:
+                return int(v)
+            except ValueError:
+                return None
+    return None
+
+
+_dp = _peek_data_parallel(sys.argv)
+if _dp is not None and "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if _dp > 1 and "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count={_dp}".strip())
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +75,10 @@ def parse_args(argv=None):
     p.add_argument("--schedule", default=None,
                    help="constant|cosine|wsd (default: arch-appropriate)")
     p.add_argument("--parties", type=int, default=4)
+    p.add_argument("--data-parallel", type=int, default=1,
+                   help="shard the vfl-zoo batch over N devices "
+                        "(sharded scale path; forces N host devices on "
+                        "CPU when launched as __main__)")
     p.add_argument("--mu", type=float, default=1e-3)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", default=None)
@@ -98,7 +137,15 @@ def main(argv=None):
         f"--parties must divide d_model={cfg.d_model}"
     vfl = VFLConfig(num_parties=args.parties, mu=args.mu,
                     lr_party=args.lr, lr_server=args.lr / args.parties)
-    vm, init, step = step_lib.make_vfl_zoo_step(model, vfl)
+    mesh = None
+    if args.data_parallel > 1:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(args.data_parallel)
+        assert args.batch_size % args.data_parallel == 0, \
+            "--batch-size must divide by --data-parallel"
+        log.log(0, data_parallel=args.data_parallel,
+                devices=len(jax.devices()))
+    vm, init, step = step_lib.make_vfl_zoo_step(model, vfl, mesh=mesh)
     state = init(key)
     zoo_step = jax.jit(step)
     rng = np.random.default_rng(args.seed)

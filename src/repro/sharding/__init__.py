@@ -1,2 +1,2 @@
 from repro.sharding.rules import (batch_pspecs, cache_pspecs, param_pspecs,
-                                  shard_tree)  # noqa: F401
+                                  replicated_pspecs, shard_tree)  # noqa: F401

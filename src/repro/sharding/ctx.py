@@ -41,6 +41,20 @@ def current_mesh():
     return _MESH.get()
 
 
+@contextlib.contextmanager
+def suspend_constraints():
+    """Trace-time escape hatch for ``shard_map`` bodies: inside a manual
+    mesh region ``with_sharding_constraint`` is invalid, so any ambient
+    ``activation_mesh`` must not apply while the body traces. The sharded
+    VFL trainer wraps its body in this so model code calling
+    ``constrain`` stays mesh-agnostic on every execution path."""
+    t = _MESH.set(None)
+    try:
+        yield
+    finally:
+        _MESH.reset(t)
+
+
 def _resolve(name, mesh, dim_size):
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     batch_axes = _BATCH_AXES.get() or ("pod", "data")

@@ -205,6 +205,15 @@ def cache_pspecs(cache_tree, mesh):
     return jax.tree_util.tree_map_with_path(f, cache_tree)
 
 
+def replicated_pspecs(tree):
+    """An all-replicated spec tree (``P()`` per leaf) — the ``shard_map``
+    in/out specs for state that must stay bitwise identical on every
+    device (the VFL party/server params of the sharded ZO trainer: the
+    update is a deterministic function of replicated keys + psum'd
+    scalars, so replication is preserved without parameter collectives)."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
 def shard_tree(tree, mesh, specs):
     """Device-put a pytree according to a spec tree (for real runs)."""
     from jax.sharding import NamedSharding

@@ -49,7 +49,8 @@ def test_host_async_executor_runs_and_accounts():
     tr = HostAsyncTrainer(model, vfl, Xp, y, batch_size=32,
                           compute_cost_s=0.0)
     res = tr.run_async(total_updates=80)
-    assert 80 <= res.updates <= 80 + q       # threads may overshoot by <q
+    assert res.updates == 80        # budget is claimed under the server
+    #                                 lock — no overshoot (tests/test_scale)
     assert res.bytes_up == res.updates * 2 * 32 * 4
     assert res.bytes_down == res.updates * 8
     losses = [h for _, h in res.history]
@@ -72,7 +73,10 @@ def test_host_sync_straggler_slower_than_async():
     Xp = np.asarray(pad_features(jnp.asarray(X), 32, q))
     vfl = VFLConfig(num_parties=q, mu=1e-3, lr_party=5e-2,
                     lr_server=5e-2 / q)
-    kw = dict(batch_size=16, compute_cost_s=5e-3, straggler={0: 6.0})
+    # compute cost well above jax-dispatch jitter: on a 2-core box the
+    # ratio is a wall-clock race, and 5e-3 left it within noise of the
+    # 1.2x threshold (sync = rounds * 6x cost, async amortizes it)
+    kw = dict(batch_size=16, compute_cost_s=12e-3, straggler={0: 6.0})
     # warm the jit caches so compile time stays out of the measurement
     HostAsyncTrainer(model, vfl, Xp, y, **kw).run_async(total_updates=8)
     t0 = time.perf_counter()
