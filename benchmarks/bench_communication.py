@@ -35,11 +35,15 @@ def run():
     for name, spec in PAPER_DATASETS.items():
         d_l = PAPER_DL[name]
         ours = paper_ratio(d_l, batch=1)
+        measured = comms.measured_paper_ratio(d_l, batch=1)
         ref = PAPER_TABLE3[name]
         bytes_tg = tg_round(d_l).total
         bytes_zoo = zoo_vfl_round(batch=1).total
+        rel = abs(measured - ours) / ours
         rows.append((f"table3_prco_{name}", 0.0,
-                     f"d_l={d_l};ratio={ours:.3f};paper={ref:.3f};"
+                     f"d_l={d_l};ratio={ours:.3f};"
+                     f"measured_ratio={measured:.3f};rel_err={rel:.4f};"
+                     f"within_5pct={rel < 0.05};paper={ref:.3f};"
                      f"bytes_tg={bytes_tg};bytes_zoo={bytes_zoo}"))
     # rank correlation with the paper's column
     ours_v = [paper_ratio(PAPER_DL[n], batch=1) for n in PAPER_TABLE3]
@@ -49,6 +53,47 @@ def run():
     rows.append(("table3_rank_correlation_vs_paper", 0.0,
                  f"spearman={rho:.3f}"))
     rows.extend(codec_sweep())
+    rows.extend(network_sweep())
+    return rows
+
+
+def network_sweep(rounds: int = 16, batch: int = 32):
+    """Per-codec executor runs over the wire: the channel's per-kind byte
+    counters must agree with the exchange's CommsMeter and the analytic
+    PRCO (comms.validate_channel), and the simulated wire clock is
+    reported per network profile. The traffic is profile-INVARIANT (a
+    profile only prices messages), so each codec trains once through a
+    RecordingChannel and the transcript is re-priced on every profile."""
+    from repro.configs import NETWORK_PROFILES
+    from repro.core.async_host import HostAsyncTrainer
+    from repro.core.vfl import PaperLRModel
+    from repro.core.wire import NetworkChannel, RecordingChannel
+
+    rows = []
+    d, q = 32, 4
+    X, y = make_classification(256, d, seed=3)
+    Xp = np.asarray(pad_features(jnp.asarray(X), d, q))
+    for codec in ("f32", "bf16", "int8"):
+        model = PaperLRModel(PaperLRConfig(num_features=d, num_parties=q))
+        vfl = VFLConfig(num_parties=q, mu=1e-3, lr_party=5e-2,
+                        lr_server=1e-2, codec=codec)
+        rec = RecordingChannel()
+        tr = HostAsyncTrainer(model, vfl, Xp, np.asarray(y),
+                              batch_size=batch, compute_cost_s=0.0,
+                              channel=rec)
+        res = tr.run_serial(rounds=rounds // q)
+        comms.validate_channel(rec, res.updates, batch, codec=codec)
+        agree = (rec.up_bytes == res.bytes_up
+                 and rec.down_bytes == res.bytes_down)
+        for profile in ("lan", "wan", "straggler"):
+            ch = NetworkChannel(NETWORK_PROFILES[profile], seed=0)
+            for msg in rec.transcript:
+                ch.send(msg)
+            rows.append((
+                f"wire_{profile}_{codec}", 0.0,
+                f"rounds={res.updates};up_bytes={ch.up_bytes};"
+                f"down_bytes={ch.down_bytes};meter_agree={agree};"
+                f"wire_time_s={ch.time_s:.6f}"))
     return rows
 
 

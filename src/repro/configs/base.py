@@ -197,6 +197,36 @@ class VFLConfig:
 
 
 @dataclass(frozen=True)
+class NetworkConfig:
+    """Per-link channel model for the wire subsystem (core/wire.py).
+
+    A message of ``n`` bytes on a link costs
+    ``scale * (latency_s + n / bandwidth_Bps + U(0, jitter_s))`` seconds,
+    where ``scale`` is the per-party link multiplier (``party_scale[m]``
+    for party m's link, 1.0 past the tuple's end — heterogeneous links /
+    stragglers). The defaults are the paper's Table-3 channel constants
+    (``core/comms.py:paper_ratio``), so the 'lan' profile reproduces the
+    paper's reported time ratios from measured message bytes.
+    """
+    name: str = "lan"
+    latency_s: float = 5e-5       # per-message (Table 3's channel model)
+    bandwidth_Bps: float = 1e8
+    jitter_s: float = 0.0         # uniform [0, jitter_s) extra per message
+    party_scale: Optional[Tuple[float, ...]] = None
+
+
+NETWORK_PROFILES = {
+    "lan": NetworkConfig("lan"),
+    # trans-continental WAN: 20ms latency, 10 Mbit/s, 2ms jitter
+    "wan": NetworkConfig("wan", latency_s=2e-2, bandwidth_Bps=1.25e6,
+                         jitter_s=2e-3),
+    # LAN where party 0's link is 6x slower (Fig 3's straggler, as a
+    # NETWORK property instead of a compute multiplier)
+    "straggler": NetworkConfig("straggler", party_scale=(6.0,)),
+}
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     batch_size: int = 8
     seq_len: int = 128

@@ -2,21 +2,32 @@
 
 One thread per party + the server state behind a lock; parties loop
 independently: sample a minibatch of their PRIVATE feature slice, compute
-(c, c_hat), "send" to the server, receive (h, h_bar), update their local
+(c, c_hat), send to the server, receive (h, h_bar), update their local
 block, repeat. A party's simulated compute cost is an explicit sleep
 proportional to its block dimension (so q-party runs genuinely parallelize,
 reproducing Fig 4's near-linear speedup), and stragglers get a slowdown
 multiplier (Fig 3's async-vs-sync efficiency).
 
 The synchronous executor (SynREVEL) runs the same math but with a barrier
-per round — every party waits for the slowest.
+per round — every party waits for the slowest. ``run_serial`` is the
+deterministic reference schedule (round-robin, single thread) used for
+transcripts, replay, and the bit-identity regression.
 
 The message round itself (perturbation, up-link codec, coefficient, update
 apply) is the SAME core/exchange.py ZOExchange the device-scan trainer in
-asyrevel.py uses — this module only adds threads, wall-clock, and the wire:
-the party encodes (c, c_hat) through the codec, the server decodes, and
-every byte that crosses is measured (``HostRunResult.bytes_up/down`` read
-the exchange's CommsMeter, so the counters cannot drift from the payloads).
+asyrevel.py uses. Every boundary crossing is a typed ``core/wire.py``
+Message routed through the trainer's ``Channel``:
+
+    party m --c_up, c_hat_up (xK)--> server --loss_down (h, h_bar_1..K)--> m
+
+With the default ``InMemoryChannel`` transport is free and runs are
+bit-identical to the pre-wire executor (pinned in tests/test_wire.py); a
+``NetworkChannel`` prices each message with a per-link latency/bandwidth/
+jitter clock (``realtime=True`` also sleeps it, replacing ad-hoc sleep
+modelling of the wire); a ``RecordingChannel`` captures the transcript the
+privacy attacks in core/privacy.py consume. Byte counters are measured
+twice independently — by the exchange's ``CommsMeter`` at the codec and by
+the channel per message kind — and tests assert they agree.
 
 This module reproduces the paper's wall-clock experiments faithfully at the
 paper's own scale; the jit/scan trainer in asyrevel.py is the TPU-scale
@@ -36,6 +47,9 @@ import numpy as np
 from repro.configs.base import VFLConfig
 from repro.core.exchange import CommsMeter, ZOExchange
 from repro.core.vfl import VFLModel
+from repro.core.wire import (SERVER, Channel, InMemoryChannel, Message,
+                             party, party_index)
+from repro.utils.prng import fold_name
 
 # This container has ONE core: concurrent XLA-CPU executions from many
 # threads thrash (dispatch contention blows sub-ms calls up to ~100ms).
@@ -51,11 +65,13 @@ class HostRunResult:
     history: list = field(default_factory=list)   # (wallclock_s, loss)
     updates: int = 0
     comms: CommsMeter = field(default_factory=CommsMeter)
+    channel: Channel | None = None                # the run's wire
 
     # Transport counters are PER ROUND, measured from the encoded wire
-    # arrays by the shared ZOExchange: up = the (c, c_hat) payload pair,
-    # down = the (h, h_bar) scalar pair — the server replies batch-MEAN
-    # losses, so the down-link is 2 * 4 bytes per round, NOT per sample.
+    # arrays by the shared ZOExchange: up = the c payload plus one c_hat
+    # per direction, down = the (h, h_bar_1..K) scalars — the server
+    # replies batch-MEAN losses, so the down-link is (1+K) * 4 bytes per
+    # round, NOT per sample.
     @property
     def bytes_up(self) -> int:
         return self.comms.up_bytes
@@ -85,6 +101,22 @@ def _serve_jit(model, vfl, w0, cs, cs_hat, y, key):
     return h, h_bar, w0
 
 
+@functools.partial(jax.jit, static_argnames=("model", "vfl"))
+def _serve_k_jit(model, vfl, w0, cs, c_hats, y, key, m):
+    """K-direction server side: h plus one h_bar per received c_hat
+    (c_hats stacked (K, B)); the server's own Eq. 17 update is unchanged
+    (it re-evaluates on the base cs)."""
+    ex = ZOExchange.from_config(vfl)
+    h = model.server_forward(w0, cs, y)
+    h_bars = jax.vmap(
+        lambda ch: model.server_forward(w0, cs.at[:, m].set(ch), y))(c_hats)
+    if vfl.perturb_server:
+        w0 = ex.server_update(w0, key, h,
+                              lambda w0p: model.server_forward(w0p, cs, y),
+                              vfl.lr_server)
+    return h, h_bars, w0
+
+
 @functools.partial(jax.jit, static_argnames=("model", "vfl", "m"))
 def _party_fused_jit(model, vfl, w_m, x_m, key, m):
     """One dispatch: perturb + both local evals + both regs."""
@@ -95,23 +127,50 @@ def _party_fused_jit(model, vfl, w_m, x_m, key, m):
     return c, c_hat, model.regularizer(w_m), model.regularizer(w_p), u
 
 
+@functools.partial(jax.jit, static_argnames=("model", "vfl", "m"))
+def _party_fused_k_jit(model, vfl, w_m, x_m, key, m):
+    """K-direction party side: the K perturbed blocks are stacked and the
+    local evals vmapped — one dispatch, K c_hat payloads (mirrors
+    ZOExchange.party_gradient's batched multi-direction round)."""
+    ex = ZOExchange.from_config(vfl)
+    keys = jax.random.split(key, vfl.num_directions)
+    w_ps, us = jax.vmap(lambda k: ex.perturb(w_m, k))(keys)
+    c = model.party_forward(w_m, x_m, m)
+    c_hats = jax.vmap(lambda w_p: model.party_forward(w_p, x_m, m))(w_ps)
+    regs = jax.vmap(model.regularizer)(w_ps)
+    return c, c_hats, model.regularizer(w_m), regs, us, keys
+
+
 @functools.partial(jax.jit, static_argnames=("vfl",))
 def _party_apply_jit(vfl, w_m, u, coeff):
     return ZOExchange.from_config(vfl).apply_direction(
         w_m, u, coeff, vfl.lr_party)
 
 
+@functools.partial(jax.jit, static_argnames=("vfl",))
+def _party_apply_k_jit(vfl, w_m, us, coeffs):
+    """K-direction averaged update: w_m - lr * mean_k coeff_k * u_k."""
+    K = vfl.num_directions
+    g = jax.tree.map(
+        lambda u: jnp.mean(
+            coeffs.reshape((K,) + (1,) * (u.ndim - 1)) * u, axis=0), us)
+    return jax.tree.map(
+        lambda a, gg: (a - vfl.lr_party * gg).astype(a.dtype), w_m, g)
+
+
 class _Server:
     """Holds w0 + the latest c table; all access behind one lock (the MPI
-    process would serialize the same way). Receives CODEC-ENCODED payloads
-    and decodes through the shared exchange — the measured byte counters
-    are the real wire sizes."""
+    process would serialize the same way). Receives the party's typed
+    up-link Messages (codec-encoded payloads), decodes through the shared
+    exchange, and replies with a loss_down Message through the channel —
+    the measured byte counters are the real wire sizes."""
 
     def __init__(self, model: VFLModel, vfl: VFLConfig, n: int, key,
-                 ex: ZOExchange, pert_key):
+                 ex: ZOExchange, pert_key, channel: Channel):
         self.model = model
         self.vfl = vfl
         self.ex = ex
+        self.channel = channel
         self.lock = threading.Lock()
         self.w0 = model.init_server(key)
         # the server's own perturbation stream derives from the TRAINER
@@ -121,7 +180,7 @@ class _Server:
         # latest function value of each party on each sample ("received
         # previously", Algorithm 1) — warm-started to zeros.
         self.c_table = np.zeros((n, model.num_parties), np.float32)
-        self.losses = HostRunResult(comms=ex.meter)
+        self.losses = HostRunResult(comms=ex.meter, channel=channel)
         # update-budget claims (run_async): taken under self.lock BEFORE a
         # party starts its round, so a run does exactly total_updates
         # updates instead of racing past the budget by up to q-1 rounds
@@ -131,41 +190,72 @@ class _Server:
         # warm-up into Fig 3/4's time-to-loss)
         self.t0 = time.perf_counter()
 
-    def handle(self, m: int, idx: np.ndarray, wire_c, wire_c_hat,
-               update_w0: bool = True):
-        """Algorithm 1 lines 8-11. Takes the encoded up-link payloads,
-        returns the (h, h_bar) scalars. Byte accounting: up = measured
-        size of the two encoded payloads (metered at encode_up), down =
-        2 scalars per ROUND (batch-mean losses)."""
+    def handle(self, msg_c: Message, msg_c_hats, update_w0: bool = True):
+        """Algorithm 1 lines 8-11. Takes the delivered c_up Message plus
+        the tuple of c_hat_up Messages (one per direction), returns the
+        delivered loss_down Message carrying the (h, h_bar_1..K) scalars.
+        Byte accounting: up = measured size of the encoded payloads
+        (metered at encode_up AND per-kind on the channel), down =
+        (1+K) scalars per ROUND (batch-mean losses)."""
+        if isinstance(msg_c_hats, Message):
+            msg_c_hats = (msg_c_hats,)
+        m = party_index(msg_c.sender)
+        idx = msg_c.meta["idx"]
         with self.lock:
-            with _JAX_LOCK:
-                c = np.asarray(self.ex.decode_up(wire_c), np.float32)
-                c_hat = jnp.asarray(self.ex.decode_up(wire_c_hat))
-            self.c_table[idx, m] = c
-            cs = jnp.asarray(self.c_table[idx])          # stale others
-            cs_hat = cs.at[:, m].set(c_hat)
-            y = self.y[idx]
-            key = jax.random.fold_in(self.pert_key, self.losses.updates)
-            with _JAX_LOCK:
-                h, h_bar, w0 = _serve_jit(self.model, self.vfl, self.w0,
-                                          cs, cs_hat, y, key)
-                h, h_bar = float(h), float(h_bar)
+            rnd = self.losses.updates
+            key = jax.random.fold_in(self.pert_key, rnd)
+            if len(msg_c_hats) == 1:
+                with _JAX_LOCK:
+                    c = np.asarray(self.ex.decode_up(msg_c.payload),
+                                   np.float32)
+                    c_hat = jnp.asarray(
+                        self.ex.decode_up(msg_c_hats[0].payload))
+                self.c_table[idx, m] = c
+                cs = jnp.asarray(self.c_table[idx])      # stale others
+                cs_hat = cs.at[:, m].set(c_hat)
+                y = self.y[idx]
+                with _JAX_LOCK:
+                    h, h_bar, w0 = _serve_jit(self.model, self.vfl,
+                                              self.w0, cs, cs_hat, y, key)
+                    h, h_bar = float(h), float(h_bar)
+                h_bars = (h_bar,)
+            else:
+                with _JAX_LOCK:
+                    c = np.asarray(self.ex.decode_up(msg_c.payload),
+                                   np.float32)
+                    c_hats = jnp.stack([
+                        jnp.asarray(self.ex.decode_up(mm.payload))
+                        for mm in msg_c_hats])
+                self.c_table[idx, m] = c
+                cs = jnp.asarray(self.c_table[idx])
+                y = self.y[idx]
+                with _JAX_LOCK:
+                    h, h_bars, w0 = _serve_k_jit(self.model, self.vfl,
+                                                 self.w0, cs, c_hats, y,
+                                                 key, m)
+                    h = float(h)
+                    h_bars = tuple(float(x) for x in np.asarray(h_bars))
             if update_w0:
                 self.w0 = w0
             self.losses.updates += 1
             self.losses.history.append(
                 (time.perf_counter() - self.t0, h))
             self.ex.meter.add_round()
-            return self.ex.send_down(h, h_bar)
+            payload = self.ex.send_down(h, *h_bars)      # meters the bytes
+            down = Message.make("loss_down", SERVER, msg_c.sender, rnd,
+                                payload)
+            return self.channel.send(down)
 
 
 class HostAsyncTrainer:
-    """AsyREVEL over threads (algorithm='asyrevel') or the synchronous
-    SynREVEL with a per-round barrier (algorithm='synrevel')."""
+    """AsyREVEL over threads (``run_async``), the synchronous SynREVEL
+    with a per-round barrier (``run_sync``), or the deterministic
+    round-robin reference schedule (``run_serial``)."""
 
     def __init__(self, model: VFLModel, vfl: VFLConfig, X, y,
                  batch_size: int = 32, compute_cost_s: float = 2e-4,
-                 straggler: dict[int, float] | None = None, seed: int = 0):
+                 straggler: dict[int, float] | None = None, seed: int = 0,
+                 channel: Channel | None = None):
         self.model, self.vfl = model, vfl
         self.X = np.asarray(X)
         self.y = np.asarray(y)
@@ -173,13 +263,16 @@ class HostAsyncTrainer:
         self.compute_cost_s = compute_cost_s
         self.straggler = straggler or {}
         self.seed = seed
+        self.channel = channel if channel is not None else InMemoryChannel()
         self.exchange = ZOExchange.from_config(vfl, meter=CommsMeter())
         q = model.num_parties
         keys = jax.random.split(jax.random.key(seed), q + 2)
         self.server = _Server(model, vfl, len(self.y), keys[0],
-                              self.exchange, pert_key=keys[q + 1])
+                              self.exchange, pert_key=keys[q + 1],
+                              channel=self.channel)
         self.server.y = jnp.asarray(self.y)
         self.party_w = [model.init_party(keys[m + 1], m) for m in range(q)]
+        self._party_round = [0] * q
         self._spent = False
 
     def _warm_jits(self):
@@ -195,12 +288,21 @@ class HostAsyncTrainer:
             y = self.server.y[idx]
             for m in range(q):
                 x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
-                c, c_hat, _, _, u = _party_fused_jit(
-                    self.model, vfl, self.party_w[m], x_m, key, m)
-                if m == 0:      # party blocks share structure/shapes
-                    _serve_jit(self.model, vfl, self.server.w0, cs,
-                               cs.at[:, m].set(c_hat), y, key)
-                    _party_apply_jit(vfl, self.party_w[m], u, 0.0)
+                if vfl.num_directions == 1:
+                    c, c_hat, _, _, u = _party_fused_jit(
+                        self.model, vfl, self.party_w[m], x_m, key, m)
+                    if m == 0:  # party blocks share structure/shapes
+                        _serve_jit(self.model, vfl, self.server.w0, cs,
+                                   cs.at[:, m].set(c_hat), y, key)
+                        _party_apply_jit(vfl, self.party_w[m], u, 0.0)
+                else:
+                    c, c_hats, _, regs, us, _ = _party_fused_k_jit(
+                        self.model, vfl, self.party_w[m], x_m, key, m)
+                    if m == 0:
+                        _serve_k_jit(self.model, vfl, self.server.w0, cs,
+                                     c_hats, y, key, m)
+                        _party_apply_k_jit(vfl, self.party_w[m], us,
+                                           jnp.zeros_like(regs))
 
     def _start_run(self):
         """Arm one run: history timestamps are RUN-relative (everything
@@ -216,32 +318,68 @@ class HostAsyncTrainer:
         self._warm_jits()
         self.server.t0 = time.perf_counter()
 
-    # ---- one party-side round (shared by both executors) ----------------
+    # ---- one party-side round (shared by all executors) ------------------
     def party_step(self, m: int, idx: np.ndarray, key):
         """Deterministic core of one Algorithm-1 round for party m on the
-        given batch: perturb/eval locally, encode + send (c, c_hat) up,
-        receive (h, h_bar) down, form the coefficient, apply the block
-        update. `key` drives the perturbation direction (and, for the
-        stochastic codec, the rounding)."""
+        given batch: perturb/eval locally, encode + send the c_up and
+        c_hat_up Messages, receive the loss_down Message, form the
+        coefficient(s), apply the block update. `key` drives the
+        perturbation direction (and, for the stochastic codec, the
+        rounding)."""
         vfl, ex = self.vfl, self.exchange
         w_m = self.party_w[m]
-        with _JAX_LOCK:
-            x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
-            c, c_hat, reg0, reg1, u = _party_fused_jit(
-                self.model, vfl, w_m, x_m, key, m)
-            wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
-            wire_c_hat = ex.encode_up(c_hat, jax.random.fold_in(key, 2))
-            wire_c = jax.tree.map(np.asarray, wire_c)
-            wire_c_hat = jax.tree.map(np.asarray, wire_c_hat)
+        rnd = self._party_round[m]
+        self._party_round[m] += 1
+        idx = np.asarray(idx)
+        if vfl.num_directions == 1:
+            with _JAX_LOCK:
+                x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
+                c, c_hat, reg0, reg1, u = _party_fused_jit(
+                    self.model, vfl, w_m, x_m, key, m)
+                wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
+                wire_c_hat = ex.encode_up(c_hat, jax.random.fold_in(key, 2))
+                wire_c = jax.tree.map(np.asarray, wire_c)
+                wire_hats = [jax.tree.map(np.asarray, wire_c_hat)]
+                regs = [float(reg1)]
+        else:
+            with _JAX_LOCK:
+                x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
+                c, c_hats, reg0, regs_k, us, keys = _party_fused_k_jit(
+                    self.model, vfl, w_m, x_m, key, m)
+                wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
+                wire_c = jax.tree.map(np.asarray, wire_c)
+                # each direction's upload is its OWN message with its own
+                # rounding key (fold_name(k_dir, 'codec_hat'), matching
+                # the device-scan path's per-direction independence)
+                wire_hats = [
+                    jax.tree.map(np.asarray, ex.encode_up(
+                        c_hats[k], fold_name(keys[k], "codec_hat")))
+                    for k in range(vfl.num_directions)]
+                regs = [float(r) for r in np.asarray(regs_k)]
         # simulated local compute cost (scales with the block dim)
         t = self.compute_cost_s * self.straggler.get(m, 1.0)
         if t > 0:
             time.sleep(t)
-        h, h_bar = self.server.handle(m, idx, wire_c, wire_c_hat)
-        coeff = ex.coefficient(h_bar + vfl.lam * float(reg1),
+        me = party(m)
+        msg_c = self.channel.send(Message.make(
+            "c_up", me, SERVER, rnd, wire_c, meta={"idx": idx}))
+        msg_hats = tuple(self.channel.send(Message.make(
+            "c_hat_up", me, SERVER, rnd, w, meta={"idx": idx, "dir": k}))
+            for k, w in enumerate(wire_hats))
+        down = self.server.handle(msg_c, msg_hats)
+        h, *h_bars = down.scalars()
+        if vfl.num_directions == 1:
+            coeff = ex.coefficient(h_bars[0] + vfl.lam * regs[0],
+                                   h + vfl.lam * float(reg0))
+            with _JAX_LOCK:
+                self.party_w[m] = _party_apply_jit(vfl, w_m, u, coeff)
+        else:
+            coeffs = jnp.asarray([
+                ex.coefficient(h_bars[k] + vfl.lam * regs[k],
                                h + vfl.lam * float(reg0))
-        with _JAX_LOCK:
-            self.party_w[m] = _party_apply_jit(vfl, w_m, u, coeff)
+                for k in range(vfl.num_directions)], jnp.float32)
+            with _JAX_LOCK:
+                self.party_w[m] = _party_apply_k_jit(vfl, w_m, us, coeffs)
 
     def _party_update(self, m: int, rng: np.random.Generator):
         idx = rng.integers(0, len(self.y), self.batch_size)
@@ -284,17 +422,49 @@ class HostAsyncTrainer:
 
     def run_sync(self, rounds: int) -> HostRunResult:
         """Barrier per round: parties run concurrently but the round only
-        finishes when the slowest party (the straggler) does."""
+        finishes when the slowest party (the straggler) does. One
+        PERSISTENT worker per party synchronized on a ``Barrier`` — the
+        old spawn-q-threads-per-round loop charged thread churn to the
+        SynREVEL wall-clock it reports."""
         self._start_run()
         q = self.model.num_parties
-        rngs = [np.random.default_rng(self.seed * 97 + m) for m in range(q)]
+        barrier = threading.Barrier(q)
+        errors: list[BaseException] = []
+
+        def worker(m):
+            rng = np.random.default_rng(self.seed * 97 + m)
+            for _ in range(rounds):
+                try:
+                    self._party_update(m, rng)
+                    barrier.wait()       # <- synchronization cost
+                except threading.BrokenBarrierError:
+                    return
+                except BaseException as e:  # noqa: BLE001
+                    errors.append(e)
+                    barrier.abort()      # release the other workers
+                    return
+
+        threads = [threading.Thread(target=worker, args=(m,), daemon=True)
+                   for m in range(q)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+        return self.server.losses
+
+    def run_serial(self, rounds: int) -> HostRunResult:
+        """Deterministic reference schedule: single thread, each round
+        visits every party in index order. Threaded runs interleave
+        server arrivals nondeterministically; this schedule never does,
+        so it is the one transcripts, replays, and the bit-identity
+        regression are pinned against."""
+        self._start_run()
+        q = self.model.num_parties
+        rngs = [np.random.default_rng(self.seed * 97 + m)
+                for m in range(q)]
         for _ in range(rounds):
-            barrier = []
             for m in range(q):
-                th = threading.Thread(target=self._party_update,
-                                      args=(m, rngs[m]), daemon=True)
-                barrier.append(th)
-                th.start()
-            for th in barrier:
-                th.join()               # <- synchronization cost
+                self._party_update(m, rngs[m])
         return self.server.losses

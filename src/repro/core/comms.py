@@ -17,6 +17,10 @@ These formulas are ANALYTIC; the executors measure real encoded payload
 bytes through core/exchange.py's ZOExchange, and ``validate_measured``
 (exercised by tests/test_exchange.py and benchmarks/bench_communication.py)
 asserts the two agree — the table is an audited claim, not documentation.
+The wire layer (core/wire.py) accounts the same traffic a third way, per
+message KIND; ``zoo_vfl_round_by_kind``/``validate_channel`` close that
+loop, and ``measured_paper_ratio`` reproduces Table 3's time ratio from
+priced Message objects instead of the formula.
 """
 from __future__ import annotations
 
@@ -51,6 +55,45 @@ def zoo_vfl_round(batch: int, c_dim: int = 1, codec: str = "f32",
     return RoundComms((1 + k) * per_msg, (1 + k) * FLOAT)
 
 
+def zoo_vfl_round_by_kind(batch: int, c_dim: int = 1, codec: str = "f32",
+                          num_directions: int = 1) -> dict:
+    """The same analytic round, split by wire message KIND — the shape the
+    channel layer (core/wire.py) accounts in. Summing the ``_up`` kinds
+    reproduces ``zoo_vfl_round(...).up_bytes`` exactly (and the ``_down``
+    kinds its down_bytes); ``validate_channel`` asserts a real channel's
+    measured counters match."""
+    per_msg = (batch * c_dim * CODEC_VALUE_BYTES[codec]
+               + CODEC_MSG_OVERHEAD[codec])
+    k = num_directions
+    return {"c_up": per_msg, "c_hat_up": k * per_msg,
+            "loss_down": (1 + k) * FLOAT}
+
+
+def validate_channel(channel, rounds: int, batch: int, c_dim: int = 1,
+                     codec: str = "f32", num_directions: int = 1) -> dict:
+    """Check a channel's MEASURED per-kind byte counters (core/wire.py)
+    against the analytic per-kind formula for ``rounds`` ZOO-VFL rounds,
+    and its up/down aggregates against ``zoo_vfl_round``; returns the
+    analytic per-kind dict or raises with both sides. Together with
+    ``validate_measured`` this closes the three-way loop: analytic PRCO ==
+    codec-metered bytes (CommsMeter) == channel-accounted bytes."""
+    analytic = {k: rounds * v for k, v in zoo_vfl_round_by_kind(
+        batch, c_dim, codec, num_directions).items()}
+    measured = {k: channel.bytes_by_kind.get(k, 0) for k in analytic}
+    if measured != analytic:
+        raise AssertionError(
+            f"channel PRCO drift: measured {measured} != analytic "
+            f"{analytic} (rounds={rounds}, batch={batch}, c_dim={c_dim}, "
+            f"codec={codec}, K={num_directions})")
+    total = zoo_vfl_round(batch, c_dim, codec, num_directions)
+    if (channel.up_bytes, channel.down_bytes) != \
+            (rounds * total.up_bytes, rounds * total.down_bytes):
+        raise AssertionError(
+            f"channel aggregate drift: ({channel.up_bytes}, "
+            f"{channel.down_bytes}) != rounds * {total}")
+    return analytic
+
+
 def validate_measured(measured: RoundComms, batch: int, c_dim: int = 1,
                       codec: str = "f32",
                       num_directions: int = 1) -> RoundComms:
@@ -78,9 +121,44 @@ def tg_round(d_m: int) -> RoundComms:
 def paper_ratio(d_l: int, batch: int = 1, c_dim: int = 1,
                 latency_s: float = 5e-5, bandwidth_Bps: float = 1e8) -> float:
     """Time(TG gradient of dim d_l) / Time(function values) under a
-    latency+bandwidth channel model — the quantity in the paper's Table 3."""
+    latency+bandwidth channel model — the quantity in the paper's Table 3.
+    ``measured_paper_ratio`` reproduces this number by pricing ACTUAL
+    Message objects on a NetworkChannel instead of plugging byte counts
+    into the formula; tests pin the two within 5%."""
     def t(n_bytes):
         return latency_s + n_bytes / bandwidth_Bps
     grad_t = t(tg_round(d_l).total)
     fv_t = t(zoo_vfl_round(batch, c_dim).total)
     return grad_t / fv_t
+
+
+def measured_paper_ratio(d_l: int, batch: int = 1, c_dim: int = 1,
+                         network=None) -> float:
+    """Table 3's time ratio, MEASURED: build each framework's per-round
+    wire messages (real payload shapes, measured nbytes) and price them
+    on a ``core/wire.py`` NetworkChannel under the paper's charging model
+    (one latency per pipelined round — ``measure_round_s``). The default
+    network is the 'lan' profile, whose constants are the analytic
+    ``paper_ratio`` defaults."""
+    import numpy as np  # noqa: PLC0415
+
+    from repro.configs.base import NetworkConfig
+    from repro.core.wire import SERVER, Message, NetworkChannel, party
+
+    cfg = network if network is not None else NetworkConfig()
+    p, s = party(0), SERVER
+    blk = np.zeros((d_l,), np.float32)
+    c = np.zeros((batch, c_dim) if c_dim > 1 else (batch,), np.float32)
+    ch_tg, ch_zoo = NetworkChannel(cfg), NetworkChannel(cfg)
+    # TG's round: the party's d_l-dim output/update block up, the updated
+    # parameter block down — d_l floats each way (= tg_round). The up-link
+    # is typed c_up: KINDS has no gradient-up kind, and what Table 3
+    # prices is only the d_l-float SIZE of the upload.
+    t_tg = ch_tg.measure_round_s([
+        Message.make("c_up", p, s, 0, blk),
+        Message.make("param_down", s, p, 0, blk)])
+    t_zoo = ch_zoo.measure_round_s([
+        Message.make("c_up", p, s, 0, c),
+        Message.make("c_hat_up", p, s, 0, c),
+        Message.make("loss_down", s, p, 0, (0.0, 0.0))])
+    return t_tg / t_zoo

@@ -1,31 +1,70 @@
-"""Privacy security of ZOO-VFL (Theorem 1) — executable attack simulations.
+"""Privacy security of ZOO-VFL (Theorem 1) — attacks on recorded traffic.
 
-For each attack the paper discusses, we implement BOTH sides:
-  * against a gradient/parameter-transmitting framework (TIG/TG-style), where
-    the attack succeeds, and
-  * against ZOO-VFL, where the adversary only ever observes function values —
-    and we measure that the attack collapses to chance / unidentifiable.
+Every attack here is a function of a ``core/wire.py`` Transcript filtered
+to its threat model's OBSERVABLE VIEW — what actually crossed the wire in
+a recorded executor run, not a hand-constructed array:
+
+  * honest-but-curious party  -> ``curious_view``: the messages on its own
+    links (its uploads + the server's replies to it);
+  * curious server            -> its own view (every up-link);
+  * colluding parties         -> ``colluding_view``: the pooled union of
+    the colluders' views;
+  * malicious party           -> the full curious view PLUS an injection
+    capability (it may forge/replay messages; ``replay_backdoor_attack``).
+
+For each attack the paper discusses we measure BOTH sides from
+transcripts of the two host executors run on the same data and seeds:
+against TIG/TG-style traffic (``grad_down``/``param_down`` observed) the
+attack succeeds; against ZOO-VFL traffic (function values only) it
+collapses to chance / unidentifiable.
 
 Attacks (paper Section 2.3):
-  1. feature inference, honest-but-curious (Gu 2020 / Yang 2019b): adversary
-     holds intermediate results z_i = w^T x_i across rounds and solves for
-     (w, x). n equations / >n unknowns -> underdetermined in ZOO-VFL.
+  1. feature inference, honest-but-curious (Gu 2020 / Yang 2019b): the
+     server holds the observed z_i = c_up values across rounds and tries
+     to solve for (w, x). Unless ``param_down`` leaks the w_t, it is
+     T*n equations in (T+n)*d unknowns -> underdetermined.
   2. label inference (Liu 2020): the sign/structure of the intermediate
-     gradient g_i = dL/dH_i reveals y_i. ZOO-VFL never transmits g_i; the
-     only observable scalar h is label-symmetric.
-  3. reverse multiplication (Weng 2020, colluding): uses w_t^T x_i -
-     w_{t-1}^T x_i = -eta g_t x_i across epochs — needs the gradient.
-  4. gradient-replacement backdoor (Liu 2020, malicious): replaces the
-     intermediate gradient of a poisoned sample with a recorded one. With no
-     transmitted gradient the adversary can only replay FUNCTION VALUES —
-     we show the induced update equals a harmless ZO step with a wrong
-     scalar, bounded by lr * |coeff| (no targeted direction control).
+     gradient g_i = dL/dH_i (``grad_down``) reveals y_i. ZOO-VFL's
+     down-link carries only batch-mean losses (``loss_down``), which are
+     label-permutation symmetric.
+  3. reverse multiplication (Weng 2020, colluding): uses
+     z_t - z_{t-1} = -eta g_t x_i across rounds — needs the transmitted
+     gradient; infeasible when no ``grad_down`` ever appears.
+  4. gradient-replacement backdoor (Liu 2020, malicious): replays a
+     recorded message. Replaying ``grad_down`` points the victim's update
+     at an attacker-chosen direction; replaying a ``loss_down`` scalar
+     only rescales a RANDOM direction — no targeting (cos ~ 1/sqrt(d)).
+
+The numeric primitives (label_inference_from_intermediate_grads etc.)
+remain importable for unit tests; the ``*_attack(transcript, ...)``
+functions are the executor-facing entry points, and
+``exposure_from_transcript`` derives the paper's Table-1 exposure columns
+from the observed message kinds instead of a hard-coded table.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import wire
+from repro.core.wire import Transcript, canonical_round
+
+
+# ------------------------------------------------------ threat-model views -
+
+def curious_view(transcript: Transcript, endpoint: str) -> Transcript:
+    """Honest-but-curious adversary at ``endpoint`` (a party name from
+    ``wire.party(m)`` or ``wire.SERVER``): it observes exactly the
+    messages on its own links."""
+    return transcript.view(endpoint)
+
+
+def colluding_view(transcript: Transcript, parties) -> Transcript:
+    """Colluding parties pool their individual views (Weng 2020's RMA
+    setting); the result is still only their own links — collusion does
+    not conjure messages nobody received."""
+    return transcript.pooled_view([wire.party(m) for m in parties])
 
 
 # ---------------------------------------------------------------- attack 1 -
@@ -53,6 +92,33 @@ def feature_inference_with_grads(ws, zs, x_true):
     x_rec, *_ = np.linalg.lstsq(W, z, rcond=None)   # (d, n)
     err = np.linalg.norm(x_rec.T - x_true) / np.linalg.norm(x_true)
     return float(err)
+
+
+def feature_inference_from_transcript(transcript: Transcript, x_dim: int,
+                                      m: int = 0) -> dict:
+    """Curious-server feature inference against party m, from its recorded
+    up-link. The adversary counts what it actually observed: every
+    (round, sample) c value is one equation; the unknowns are the n
+    distinct samples' features plus — unless ``param_down`` leaked the
+    party parameters — one w_t per observed round. Returns the
+    equations/unknowns ratio (< 1: provably underdetermined) and whether
+    the system is solvable."""
+    view = curious_view(transcript, wire.SERVER)
+    ups = view.filter(kind="c_up", sender=wire.party(m))
+    sample_ids: set = set()
+    equations = 0
+    for msg in ups:
+        idx = np.asarray(msg.meta["idx"]).reshape(-1)
+        sample_ids.update(int(i) for i in idx)
+        equations += idx.size
+    T, n = len(ups), len(sample_ids)
+    params_leak = "param_down" in transcript.kinds()
+    unknowns = n * x_dim + (0 if params_leak else T * x_dim)
+    ratio = equations / max(unknowns, 1)
+    return {"rounds": T, "samples": n, "equations": equations,
+            "unknowns": unknowns, "ratio": ratio,
+            "params_leaked": params_leak,
+            "solvable": params_leak or ratio >= 1.0}
 
 
 # ---------------------------------------------------------------- attack 2 -
@@ -85,6 +151,33 @@ def label_inference_from_function_values(h, y_true, rng=None):
     return float(acc)
 
 
+def label_inference_attack(transcript: Transcript, y_true,
+                           m: int = 0) -> dict:
+    """Honest-but-curious party m infers training labels from its OWN
+    down-link. If the framework sent it intermediate gradients
+    (``grad_down``), each per-sample gradient votes for a label; if it
+    only ever received scalar losses (``loss_down``), the strongest
+    simple estimator thresholds the loss series. Returns the accuracy
+    and which observable it came from."""
+    view = curious_view(transcript, wire.party(m))
+    y_true = np.asarray(y_true)
+    grads = view.filter(kind="grad_down", receiver=wire.party(m))
+    if len(grads):
+        hits = total = 0
+        for msg in grads:
+            idx = np.asarray(msg.meta["idx"]).reshape(-1)
+            acc = label_inference_from_intermediate_grads(
+                msg.payload, y_true[idx])
+            hits += acc * idx.size
+            total += idx.size
+        return {"accuracy": hits / max(total, 1), "observable": "grad_down",
+                "messages": len(grads)}
+    losses = view.filter(kind="loss_down", receiver=wire.party(m))
+    h = np.asarray([msg.scalars()[0] for msg in losses])
+    return {"accuracy": label_inference_from_function_values(h, y_true),
+            "observable": "loss_down", "messages": len(losses)}
+
+
 # ---------------------------------------------------------------- attack 3 -
 
 def reverse_multiplication_attack(z_t, z_tm1, eta, g_t=None):
@@ -94,6 +187,37 @@ def reverse_multiplication_attack(z_t, z_tm1, eta, g_t=None):
     if g_t is None:
         return None
     return (np.asarray(z_tm1) - np.asarray(z_t)) / (eta * np.asarray(g_t))
+
+
+def reverse_multiplication_from_transcript(transcript: Transcript,
+                                           eta: float,
+                                           colluders=(0,)) -> dict:
+    """Colluding RMA against the first colluder's block: find two
+    successive ``c_up`` rounds sharing sample ids and the ``grad_down``
+    between them, then divide. Without a transmitted gradient the divisor
+    was never on the wire — the pooled view cannot supply it and the
+    attack returns recovered=None."""
+    m = colluders[0]
+    view = colluding_view(transcript, colluders)
+    ups = list(view.filter(kind="c_up", sender=wire.party(m)))
+    grads = {msg.round: msg
+             for msg in view.filter(kind="grad_down",
+                                    receiver=wire.party(m))}
+    for prev, cur in zip(ups, ups[1:]):
+        i_prev = np.asarray(prev.meta["idx"]).reshape(-1)
+        i_cur = np.asarray(cur.meta["idx"]).reshape(-1)
+        if not np.array_equal(i_prev, i_cur):
+            continue
+        g_msg = grads.get(prev.round)
+        if g_msg is None:
+            return {"recovered": None, "feasible": False,
+                    "reason": "no grad_down on the wire"}
+        rec = reverse_multiplication_attack(
+            np.asarray(cur.payload), np.asarray(prev.payload), eta,
+            g_t=np.asarray(g_msg.payload))
+        return {"recovered": rec, "feasible": True, "round": prev.round}
+    return {"recovered": None, "feasible": False,
+            "reason": "no aligned successive rounds observed"}
 
 
 # ---------------------------------------------------------------- attack 4 -
@@ -116,15 +240,63 @@ def backdoor_update_influence(lr: float, mu: float, h_replay: float,
     return float(jnp.linalg.norm(dev)), float(jnp.abs(cos))
 
 
+def replay_backdoor_attack(transcript: Transcript, lr: float, mu: float,
+                           w_dim: int, m: int = 0, key=None) -> dict:
+    """Malicious party m: full curious view PLUS injection — it replays a
+    stale recorded down-link message in place of the fresh one (the
+    injection hook; the forged message is what gradient-replacement
+    backdoors do to ``grad_down`` traffic). When the only replayable
+    observable is a ``loss_down`` scalar, the induced deviation is a
+    random-direction nudge with |cos| ~ 1/sqrt(d) to ANY attacker target:
+    no direction control. When ``grad_down`` is on the wire the attacker
+    replays the gradient itself and steers the update exactly (cos = 1 to
+    the recorded direction)."""
+    view = curious_view(transcript, wire.party(m))
+    grads = view.filter(kind="grad_down", receiver=wire.party(m))
+    if len(grads):
+        g = np.asarray(grads[0].payload, np.float64).reshape(-1)
+        # replaying the recorded gradient reproduces it exactly: the
+        # victim's update direction IS the attacker-chosen payload
+        cos = 1.0 if np.linalg.norm(g) > 0 else 0.0
+        return {"observable": "grad_down", "direction_control": True,
+                "cos_to_target": cos}
+    losses = view.filter(kind="loss_down", receiver=wire.party(m))
+    h = [msg.scalars()[0] for msg in losses]
+    if len(h) < 2:
+        raise ValueError("transcript too short for a replay attack")
+    dev, cos = backdoor_update_influence(lr, mu, h_replay=h[0],
+                                         h_true=h[-1], w_dim=w_dim,
+                                         key=key)
+    return {"observable": "loss_down", "direction_control": False,
+            "cos_to_target": cos, "deviation_norm": dev}
+
+
+# ---------------------------------------------------------------- exposure -
+
+def exposure_from_transcript(transcript: Transcript) -> dict:
+    """Paper Table 1, derived from the observed message kinds instead of a
+    hard-coded table: what this transcript structurally exposed.
+    ``local_grads`` is exposed when parameter blocks crossed the wire in
+    two or more rounds — successive snapshots reveal the applied gradient
+    as (w_t - w_{t-1}) / lr (the RMA argument)."""
+    kinds = transcript.kinds()
+    param_rounds = {msg.round for msg in transcript
+                    if msg.kind == "param_down"}
+    return {
+        "model_params": "param_down" in kinds,
+        "intermediate_grads": "grad_down" in kinds,
+        "local_grads": len(param_rounds) >= 2,
+        "function_values": bool(kinds & {"loss_down", "c_up", "c_hat_up"}),
+    }
+
+
 def exposure_report(framework: str) -> dict:
-    """What each framework structurally exposes per round (Table 1 logic)."""
-    if framework == "zoo-vfl":
-        return {"model_params": False, "intermediate_grads": False,
-                "local_grads": False, "function_values": True}
-    if framework == "tig":
-        return {"model_params": False, "intermediate_grads": True,
-                "local_grads": False, "function_values": True}
-    if framework == "tg":
-        return {"model_params": True, "intermediate_grads": True,
-                "local_grads": True, "function_values": True}
-    raise ValueError(framework)
+    """Table-1 exposure of a framework NAME: generate its canonical
+    per-round wire pattern (core/wire.py) for two rounds and derive the
+    exposure from the kinds that cross — the structural claim, computed
+    the same way as for a recorded transcript."""
+    t = Transcript()
+    for rnd in range(2):
+        for msg in canonical_round(framework, rnd=rnd):
+            t.append(msg)
+    return exposure_from_transcript(t)

@@ -10,6 +10,15 @@ Two consequences the paper measures:
   * its per-round communication is the intermediate/local gradient
     (dimension d_l), vs scalars for ZOO-VFL (Table 3) — accounted in
     core/comms.py.
+
+Two executors:
+  * ``tig_train`` — the jit/scan trainer (convergence curves);
+  * ``HostTIGTrainer`` — the host-level executor that routes every
+    boundary crossing through core/wire.py, emitting the ``grad_down``
+    Messages Theorem 1's attacks feed on. Recorded TIG transcripts and
+    recorded ZOO-VFL transcripts (async_host.py) are directly comparable:
+    same data, same seeds, same wire layer — only the message KINDS
+    differ, which is exactly the paper's point.
 """
 from __future__ import annotations
 
@@ -18,9 +27,13 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import VFLConfig
+from repro.core.asyrevel import _activation_probs
 from repro.core.vfl import VFLModel
+from repro.core.wire import (SERVER, Channel, InMemoryChannel, Message,
+                             party, party_index)
 from repro.utils.prng import fold_name
 
 
@@ -38,11 +51,14 @@ class BlackBoxError(RuntimeError):
 def tig_step(model: VFLModel, vfl: VFLConfig, state: TIGState, batch):
     """Asynchronous split-learning step: one party per iteration gets its
     intermediate gradient from the server and backprops locally."""
-    q = vfl.num_parties
     key = jax.random.fold_in(state.key, state.step)
+    # Assumption 3's activation distribution, shared with AsyREVEL
+    # (core/asyrevel.py) so baseline and treatment sample parties
+    # identically — a hard-coded uniform here silently diverged whenever
+    # vfl.activation_probs was set.
     m_t = jax.random.categorical(
         fold_name(key, "party"),
-        jnp.zeros((q,)))
+        jnp.log(_activation_probs(vfl)))
     x = model.party_args(batch)
     y = model.server_args(batch)
 
@@ -92,3 +108,133 @@ def tig_train(model: VFLModel, vfl: VFLConfig, data, key, steps: int,
             "local model; neither exists for black-box models. "
             "(ZOO-VFL/AsyREVEL needs only the function values.)")
     return _train_jit(model, vfl, data, key, steps, batch_size)
+
+
+# ------------------------------------------------------ host executor -----
+
+@functools.partial(jax.jit, static_argnames=("model", "m"))
+def _tig_party_c_jit(model, w_m, x_m, m):
+    return model.party_forward(w_m, x_m, m)
+
+
+@functools.partial(jax.jit, static_argnames=("model",))
+def _tig_serve_jit(model, w0, cs, y, lr_server):
+    """Server side of one TIG round: loss, the per-sample intermediate
+    gradient dL/dcs, and the server's own first-order update."""
+    def loss(w0, cs):
+        return model.server_forward(w0, cs, y)
+
+    h = loss(w0, cs)
+    g0, g_cs = jax.grad(loss, argnums=(0, 1))(w0, cs)
+    w0 = jax.tree.map(lambda a, g: (a - lr_server * g).astype(a.dtype),
+                      w0, g0)
+    return h, g_cs, w0
+
+
+@functools.partial(jax.jit, static_argnames=("model", "vfl", "m"))
+def _tig_party_apply_jit(model, vfl, w_m, x_m, g_c, m):
+    """Party-side chain rule: pull the received intermediate gradient
+    back through the local tower (plus the private regularizer term) and
+    take the first-order step."""
+    def fwd(w):
+        return model.party_forward(w, x_m, m)
+
+    _, vjp = jax.vjp(fwd, w_m)
+    (g_w,) = vjp(g_c)
+    g_reg = jax.grad(lambda w: model.regularizer(w))(w_m)
+    return jax.tree.map(
+        lambda a, g, gr: (a - vfl.lr_party * (g + vfl.lam * gr)
+                          ).astype(a.dtype),
+        w_m, g_w, g_reg)
+
+
+class HostTIGTrainer:
+    """Split-learning host executor over the wire layer.
+
+    The same shape as ``async_host.HostAsyncTrainer`` (c table of latest
+    party outputs, per-party rounds, shared channel) but the protocol is
+    TIG's: party m uploads ``c_up``; the server replies with the
+    per-sample intermediate gradient ``grad_down`` = dL/dc_m plus a
+    monitoring ``loss_down`` scalar; the party chain-rules the gradient
+    through its private tower. Every crossing is a typed Message, so a
+    ``RecordingChannel`` yields the transcript the privacy attacks run on
+    — a ``grad_down`` stream here vs a function-value stream for ZOO-VFL.
+
+    Scheduling is the deterministic serial round-robin (``run``): the
+    privacy comparison wants reproducible transcripts, not wall-clock.
+    """
+
+    def __init__(self, model: VFLModel, vfl: VFLConfig, X, y,
+                 batch_size: int = 32, seed: int = 0,
+                 channel: Channel | None = None, black_box: bool = False,
+                 sampler: str = "random"):
+        if black_box:
+            raise BlackBoxError(
+                "TIG requires dL/dc_m from the server and dc_m/dw_m "
+                "through the local model; neither exists for black-box "
+                "models.")
+        assert sampler in ("random", "full")
+        self.model, self.vfl = model, vfl
+        self.X = np.asarray(X)
+        self.y = np.asarray(y)
+        self.batch_size = batch_size
+        self.seed = seed
+        self.sampler = sampler
+        self.channel = channel if channel is not None else InMemoryChannel()
+        q = model.num_parties
+        keys = jax.random.split(jax.random.key(seed), q + 1)
+        self.w0 = model.init_server(keys[0])
+        self.party_w = [model.init_party(keys[m + 1], m) for m in range(q)]
+        self.c_table = np.zeros((len(self.y), q), np.float32)
+        self.history: list[float] = []
+        self._party_round = [0] * q
+
+    def party_step(self, m: int, idx: np.ndarray):
+        """One TIG round for party m: c_up -> (grad_down, loss_down) ->
+        local backprop."""
+        idx = np.asarray(idx)
+        rnd = self._party_round[m]
+        self._party_round[m] += 1
+        x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
+        c = np.asarray(_tig_party_c_jit(self.model, self.party_w[m],
+                                        x_m, m), np.float32)
+        me = party(m)
+        msg_c = self.channel.send(Message.make(
+            "c_up", me, SERVER, rnd, c, meta={"idx": idx}))
+
+        # ---- server side -------------------------------------------------
+        sm = party_index(msg_c.sender)
+        sidx = msg_c.meta["idx"]
+        self.c_table[sidx, sm] = np.asarray(msg_c.payload, np.float32)
+        cs = jnp.asarray(self.c_table[sidx])         # stale others
+        y = jnp.asarray(self.y[sidx])
+        h, g_cs, self.w0 = _tig_serve_jit(self.model, self.w0, cs, y,
+                                          self.vfl.lr_server)
+        g_m = np.asarray(g_cs[:, sm], np.float32)    # dL/dc_m per sample
+        self.history.append(float(h))
+        msg_g = self.channel.send(Message.make(
+            "grad_down", SERVER, me, rnd, g_m, meta={"idx": sidx}))
+        msg_h = self.channel.send(Message.make(
+            "loss_down", SERVER, me, rnd, (float(h),)))
+
+        # ---- party side: chain rule through the private tower ------------
+        g_c = jnp.asarray(msg_g.payload)
+        self.party_w[m] = _tig_party_apply_jit(
+            self.model, self.vfl, self.party_w[m], x_m, g_c, m)
+        return msg_h.scalars()[0]
+
+    def run(self, rounds: int):
+        """Deterministic serial round-robin over parties — the reference
+        schedule, mirroring HostAsyncTrainer.run_serial."""
+        q = self.model.num_parties
+        rngs = [np.random.default_rng(self.seed * 97 + m)
+                for m in range(q)]
+        n = len(self.y)
+        for _ in range(rounds):
+            for m in range(q):
+                if self.sampler == "full":
+                    idx = np.arange(min(self.batch_size, n))
+                else:
+                    idx = rngs[m].integers(0, n, self.batch_size)
+                self.party_step(m, idx)
+        return self.history

@@ -79,6 +79,11 @@ def parse_args(argv=None):
                    help="shard the vfl-zoo batch over N devices "
                         "(sharded scale path; forces N host devices on "
                         "CPU when launched as __main__)")
+    p.add_argument("--network", default=None,
+                   choices=["lan", "wan", "straggler"],
+                   help="price the vfl-zoo run's wire traffic on a "
+                        "NetworkChannel profile (configs.NETWORK_PROFILES)"
+                        " and report the simulated transport time")
     p.add_argument("--mu", type=float, default=1e-3)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", default=None)
@@ -157,6 +162,32 @@ def main(argv=None):
         losses.append(float(h))
         if s % args.log_every == 0 or s == args.steps - 1:
             log.log(s, h=h)
+    if args.network:
+        # the scan trainer exchanges the same per-round payloads as the
+        # host executor; price them on the chosen channel profile so the
+        # run reports its simulated transport time next to wall-clock
+        from repro.configs import NETWORK_PROFILES
+        from repro.core.exchange import ZOExchange
+        from repro.core.wire import SERVER, Message, NetworkChannel
+        from repro.core.wire import party as wire_party
+
+        ex = ZOExchange.from_config(vfl)
+        ch = NetworkChannel(NETWORK_PROFILES[args.network], seed=args.seed)
+        c0 = np.zeros((args.batch_size, args.seq_len,
+                       cfg.d_model // args.parties), np.float32)
+        nb = ex.codec.nbytes(c0)
+        K = vfl.num_directions
+        for s in range(args.steps):
+            p0 = wire_party(s % args.parties)
+            msgs = ([Message.make("c_up", p0, SERVER, s, None, nbytes=nb)]
+                    + [Message.make("c_hat_up", p0, SERVER, s, None,
+                                    nbytes=nb) for _ in range(K)]
+                    + [Message.make("loss_down", SERVER, p0, s,
+                                    tuple([0.0] * (1 + K)))])
+            ch.measure_round_s(msgs)
+        log.log(args.steps, network=args.network, wire_s=ch.time_s,
+                wire_up_mb=ch.up_bytes / 1e6,
+                wire_down_bytes=ch.down_bytes)
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps,
                         {"w0": state.w0, "parties": state.parties},

@@ -11,6 +11,8 @@ from repro.configs import ARCH_IDS, get_config
 from repro.launch import steps as step_lib
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # full model builds/compiles; fast CI skips
+
 
 def _batch(cfg, B=2, S=16, seed=0):
     rng = np.random.default_rng(seed)

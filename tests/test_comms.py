@@ -58,6 +58,7 @@ def test_host_async_executor_runs_and_accounts():
     assert np.mean(losses[-20:]) < np.mean(losses[:20])
 
 
+@pytest.mark.slow
 def test_host_sync_straggler_slower_than_async():
     """Fig 3's systems claim: with a straggler, sync wall-clock per update
     is strictly worse than async."""

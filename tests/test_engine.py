@@ -8,6 +8,8 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import Request, ServingEngine
 
+pytestmark = pytest.mark.slow  # full model builds/compiles; fast CI skips
+
 
 @pytest.fixture(scope="module")
 def setup():

@@ -86,6 +86,7 @@ def test_decode_steps_match_sequence():
                                atol=1e-5)
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(T=st.integers(2, 48), chunk=st.sampled_from([4, 8, 16]),
        seed=st.integers(0, 1000))

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.optim import (adam_init, adam_update, make_schedule, sgd_update,
                          zo_sgd_step)
@@ -47,6 +48,7 @@ def test_cosine_schedule_monotone_after_warmup():
     assert lrs[-1] >= 0.099                   # final_frac floor
 
 
+@pytest.mark.slow
 def test_zo_sgd_minimizes_quadratic():
     def loss(p):
         return jnp.sum((p["x"] - 1.0) ** 2)

@@ -10,6 +10,8 @@ from repro.configs import VFLConfig, get_config
 from repro.models import build_model
 from repro.models.layers import chunked_cross_entropy, cross_entropy_loss
 
+pytestmark = pytest.mark.slow  # full model builds/compiles; fast CI skips
+
 
 # ---------------------------------------------------------- chunked CE ---
 

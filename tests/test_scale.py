@@ -72,11 +72,16 @@ def test_server_perturbation_stream_depends_on_trainer_seed():
     model, data = _lr_setup()
 
     def after_one_round(seed):
+        from repro.core.wire import SERVER, Message, party
         tr = _host_trainer(model, data, seed=seed)
         tr.server.w0 = {"b": jnp.zeros((), jnp.float32)}  # common start
         idx = np.arange(8)
         c = np.linspace(-1.0, 1.0, 8).astype(np.float32)
-        tr.server.handle(0, idx, c, c + 0.01)
+        tr.server.handle(
+            Message.make("c_up", party(0), SERVER, 0, c,
+                         meta={"idx": idx}),
+            Message.make("c_hat_up", party(0), SERVER, 0, c + 0.01,
+                         meta={"idx": idx}))
         return float(tr.server.w0["b"])
 
     b0, b0_again, b1 = after_one_round(0), after_one_round(0), \
@@ -174,6 +179,7 @@ def test_asyrevel_multi_direction_int8_uses_per_direction_codec_keys():
 
 # ------------------------------------------------- sharded trainer --------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("algorithm", ["asyrevel", "synrevel"])
 @pytest.mark.parametrize("codec,K", [("f32", 1), ("int8", 2)])
 def test_sharded_trainer_bit_identical_on_one_device_mesh(algorithm,
@@ -248,6 +254,7 @@ def test_sharded_int8_rounding_independent_per_shard():
         assert (shards[0] != shards[r]).any(), r
 
 
+@pytest.mark.slow
 def test_vfl_zoo_step_sharded_matches_unsharded_on_one_device_mesh():
     """launch/steps.py's mesh= path wraps the SAME asyrevel_step in
     shard_map; on a 1-device mesh the two steps must agree exactly."""

@@ -8,6 +8,7 @@ from repro.configs import get_config
 from repro.models import build_model
 
 
+@pytest.mark.slow
 def test_int8_cache_matches_bf16_cache_argmax():
     cfg = get_config("deepseek-7b", reduced=True)
     m1 = build_model(cfg)
@@ -40,6 +41,7 @@ def test_int8_cache_is_smaller():
     assert tree_bytes(c2) < 0.6 * tree_bytes(c1)
 
 
+@pytest.mark.slow
 def test_sliding_window_rolling_cache_decode():
     """Decode past the window: the rolling buffer must keep only the last
     `window` positions and logits must match a full-cache model restricted
@@ -71,6 +73,7 @@ def test_train_launcher_smoke(tmp_path):
     assert latest_step(str(tmp_path)) == 6
 
 
+@pytest.mark.slow
 def test_train_launcher_vfl_zoo_smoke():
     from repro.launch import train as train_mod
     loss = train_mod.main([

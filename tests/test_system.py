@@ -100,6 +100,7 @@ def test_losslessness_vs_nonf(lr_setup):
     assert abs(acc8 - acc1) < 0.08, (acc8, acc1)
 
 
+@pytest.mark.slow
 def test_fcn_asyrevel_decreases_loss():
     """The paper's deep (FCN) black-box model trains under AsyREVEL."""
     rng = np.random.default_rng(3)

@@ -12,6 +12,7 @@ from repro.utils.prng import sample_direction
 jax.config.update("jax_enable_x64", False)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(d=st.integers(2, 200), seed=st.integers(0, 2**31 - 1),
        dist=st.sampled_from(["gaussian", "uniform"]))
