@@ -1,0 +1,78 @@
+"""Runtime bench: the multi-process TCP federation vs the in-memory
+executor on the SAME fixed-seed problem — rounds/sec and loss-trajectory
+parity, with and without injected faults.
+
+Rows:
+  * runtime_memory_serial     in-process HostAsyncTrainer.run_serial
+  * runtime_tcp_serial        server + parties as OS processes over TCP,
+                              deterministic schedule; trajectory must be
+                              BIT-identical to the in-memory row
+  * runtime_tcp_arrival       the async dispatch order (AsyREVEL)
+  * runtime_tcp_crash_rejoin  one scripted party crash + checkpointed
+                              rejoin under the serial schedule; lossless
+                              recovery => still bit-identical
+
+The TCP rounds/sec number includes real socket hops, serialization, and
+(for the crash row) process respawn + checkpoint restore — the honest
+price of the process boundary at the paper's message sizes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import RuntimeConfig
+from repro.runtime import (FailurePlan, PartyFault, history_losses,
+                           run_federation, run_reference)
+
+SPEC = {"kind": "lr", "parties": 2, "features": 32, "samples": 128,
+        "batch": 16, "seed": 0,
+        "vfl": {"mu": 1e-3, "lr_party": 5e-2, "lr_server": 2.5e-2}}
+ROUNDS = 12
+
+
+def _cfg(schedule="serial"):
+    return RuntimeConfig(schedule=schedule, deadline_s=240.0)
+
+
+def run():
+    rows = []
+    q = SPEC["parties"]
+    total = ROUNDS * q
+
+    t0 = time.perf_counter()
+    _, ref = run_reference(SPEC, ROUNDS)
+    mem_s = time.perf_counter() - t0
+    ref_h = np.asarray([h for _, h in ref.history])
+    rows.append(("runtime_memory_serial", mem_s / total * 1e6,
+                 f"rounds_per_s={total / mem_s:.1f};"
+                 f"final_h={ref_h[-1]:.6f}"))
+
+    def tcp_row(name, schedule, plan=FailurePlan(), ckpt_root=None):
+        t0 = time.perf_counter()
+        res = run_federation(SPEC, ROUNDS, cfg=_cfg(schedule), plan=plan,
+                             ckpt_root=ckpt_root)
+        dt = time.perf_counter() - t0
+        h = history_losses(res)
+        diff = (float(np.max(np.abs(h - ref_h)))
+                if schedule == "serial" else float("nan"))
+        rows.append((name, dt / total * 1e6,
+                     f"rounds_per_s={total / dt:.1f};"
+                     f"final_h={h[-1]:.6f};"
+                     f"traj_max_abs_diff={diff};"
+                     f"bit_identical={int(np.array_equal(h, ref_h))};"
+                     f"rejoins={res['rejoins']};"
+                     f"socket_bytes={res['server']['socket_bytes_in'] + res['server']['socket_bytes_out']}"))
+        return res
+
+    tcp_row("runtime_tcp_serial", "serial")
+    tcp_row("runtime_tcp_arrival", "arrival")
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        plan = FailurePlan({1: PartyFault(crash_at_round=ROUNDS // 2,
+                                          rejoin_delay_s=0.3)})
+        tcp_row("runtime_tcp_crash_rejoin", "serial", plan=plan,
+                ckpt_root=root)
+    return rows

@@ -33,6 +33,9 @@ SUITES = {
              "rate"),
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel validation",
                 "kernels"),
+    "runtime": ("benchmarks.bench_runtime",
+                "Multi-process TCP runtime vs in-memory executor",
+                "runtime"),
 }
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

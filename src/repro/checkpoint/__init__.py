@@ -1,1 +1,3 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint  # noqa
+from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,  # noqa
+                                   available_steps, latest_step,
+                                   load_metadata)

@@ -36,19 +36,48 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: dict | None
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:
         np.savez(f, **flat)
-    os.replace(tmp, path)
     if metadata is not None:
-        with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
+        # metadata commits atomically BEFORE the npz rename: latest_step
+        # keys on the npz, so a crash between the two renames leaves a
+        # stray json for a step that does not exist yet (invisible),
+        # while the reverse order could surface a step whose metadata is
+        # missing — the inconsistent-state window the runtime's
+        # crash/resume path cannot tolerate.
+        mfd, mtmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+        with os.fdopen(mfd, "w") as f:
             json.dump(metadata, f)
+        os.replace(mtmp, os.path.join(ckpt_dir, f"step_{step:08d}.json"))
+    os.replace(tmp, path)
     return path
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def available_steps(ckpt_dir: str) -> list:
+    """All committed steps in the directory, ascending. *.tmp files —
+    partial writes left behind by killed writers — are never steps, even
+    if the name embeds step digits."""
     if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for fn in os.listdir(ckpt_dir):
+        if fn.endswith(".tmp"):
+            continue
+        if (m := re.match(r"step_(\d+)\.npz$", fn)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_metadata(ckpt_dir: str, step: int) -> dict | None:
+    """The metadata json committed alongside step (None if absent)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.json")
+    if not os.path.exists(path):
         return None
-    steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
-             if (m := re.match(r"step_(\d+)\.npz$", fn))]
-    return max(steps) if steps else None
+    with open(path) as f:
+        return json.load(f)
 
 
 def restore_checkpoint(ckpt_dir: str, tree_like, step: int | None = None):

@@ -227,6 +227,29 @@ NETWORK_PROFILES = {
 
 
 @dataclass(frozen=True)
+class RuntimeConfig:
+    """Knobs of the multi-process TCP federation runtime (repro/runtime).
+
+    ``schedule`` picks the server's dispatch order: 'serial' processes
+    party rounds in strict round-robin (the deterministic reference —
+    bit-identical to ``HostAsyncTrainer.run_serial``), 'arrival'
+    processes complete rounds in the order they arrive off the sockets
+    (AsyREVEL's asynchrony: fast parties never wait for stragglers).
+    """
+    host: str = "127.0.0.1"
+    port: int = 0                 # 0 = OS-assigned (reported to parties)
+    schedule: str = "serial"      # serial | arrival
+    request_timeout_s: float = 15.0   # per recv on an open connection
+    max_retries: int = 4          # reply waits before a party gives up
+    connect_retries: int = 60     # dial attempts (server may start late)
+    connect_backoff_s: float = 0.25
+    heartbeat_s: float = 2.0      # party pings when a reply is this late
+    ckpt_every: int = 1           # party checkpoint cadence (rounds)
+    compute_cost_s: float = 0.0   # simulated local compute per round
+    deadline_s: float = 300.0     # hard wall for the whole federation
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     batch_size: int = 8
     seq_len: int = 128

@@ -158,6 +158,113 @@ def _party_apply_k_jit(vfl, w_m, us, coeffs):
         lambda a, gg: (a - vfl.lr_party * gg).astype(a.dtype), w_m, g)
 
 
+# ---- the party-side round, split at the wire boundary ---------------------
+#
+# HostAsyncTrainer.party_step = prepare -> send up -> (server) -> apply.
+# The multi-process runtime (repro/runtime/party.py) runs the SAME three
+# helpers with a TCP socket between send and apply, so a TCP run is
+# bit-identical to run_serial by construction — there is exactly one
+# implementation of the party math.
+
+def trainer_keys(seed: int, q: int):
+    """The key split every executor shares: (server_init, party_inits[q],
+    server_perturbation_stream)."""
+    keys = jax.random.split(jax.random.key(seed), q + 2)
+    return keys[0], [keys[m + 1] for m in range(q)], keys[q + 1]
+
+
+def party_rng_seed(seed: int, m: int) -> int:
+    """Party m's private numpy stream (batch sampling + round keys)."""
+    return seed * 97 + m
+
+
+def draw_round(rng: np.random.Generator, n: int, batch_size: int):
+    """One round's (batch indices, perturbation key) — two draws, in this
+    exact order, so a resuming party can fast-forward its stream by
+    replaying completed rounds."""
+    idx = rng.integers(0, n, batch_size)
+    key = jax.random.key(rng.integers(1 << 31))
+    return idx, key
+
+
+@dataclass
+class PartyRoundPrep:
+    """Everything party m derives locally for one round: the encoded
+    up-link payloads plus the private state the apply step needs."""
+
+    wire_c: object
+    wire_hats: list
+    reg0: float
+    regs: list
+    us: object            # u tree (K=1) or stacked u trees (K>1)
+
+
+def party_round_prepare(model, vfl: VFLConfig, ex: ZOExchange, w_m, X,
+                        idx, key, m: int) -> PartyRoundPrep:
+    """Perturb/evaluate locally and encode the up-link payloads (the
+    compute half of Algorithm 1's party round — no wire crossing)."""
+    idx = np.asarray(idx)
+    if vfl.num_directions == 1:
+        with _JAX_LOCK:
+            x_m = model.slice_features(jnp.asarray(X[idx]), m)
+            c, c_hat, reg0, reg1, u = _party_fused_jit(
+                model, vfl, w_m, x_m, key, m)
+            wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
+            wire_c_hat = ex.encode_up(c_hat, jax.random.fold_in(key, 2))
+            wire_c = jax.tree.map(np.asarray, wire_c)
+            wire_hats = [jax.tree.map(np.asarray, wire_c_hat)]
+            regs = [float(reg1)]
+            us = u
+    else:
+        with _JAX_LOCK:
+            x_m = model.slice_features(jnp.asarray(X[idx]), m)
+            c, c_hats, reg0, regs_k, us, keys = _party_fused_k_jit(
+                model, vfl, w_m, x_m, key, m)
+            wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
+            wire_c = jax.tree.map(np.asarray, wire_c)
+            # each direction's upload is its OWN message with its own
+            # rounding key (fold_name(k_dir, 'codec_hat'), matching
+            # the device-scan path's per-direction independence)
+            wire_hats = [
+                jax.tree.map(np.asarray, ex.encode_up(
+                    c_hats[k], fold_name(keys[k], "codec_hat")))
+                for k in range(vfl.num_directions)]
+            regs = [float(r) for r in np.asarray(regs_k)]
+    return PartyRoundPrep(wire_c, wire_hats, float(reg0), regs, us)
+
+
+def party_round_messages(channel: Channel, m: int, rnd: int, idx,
+                         prep: PartyRoundPrep):
+    """Route the round's up-link through the (local) channel stack and
+    return the delivered Messages."""
+    idx = np.asarray(idx)
+    me = party(m)
+    msg_c = channel.send(Message.make(
+        "c_up", me, SERVER, rnd, prep.wire_c, meta={"idx": idx}))
+    msg_hats = tuple(channel.send(Message.make(
+        "c_hat_up", me, SERVER, rnd, w, meta={"idx": idx, "dir": k}))
+        for k, w in enumerate(prep.wire_hats))
+    return msg_c, msg_hats
+
+
+def party_round_apply(vfl: VFLConfig, ex: ZOExchange, w_m,
+                      prep: PartyRoundPrep, scalars):
+    """Form the two-point coefficient(s) from the received loss_down
+    scalars and apply the block update (Algorithm 1 line 7)."""
+    h, *h_bars = scalars
+    if vfl.num_directions == 1:
+        coeff = ex.coefficient(h_bars[0] + vfl.lam * prep.regs[0],
+                               h + vfl.lam * prep.reg0)
+        with _JAX_LOCK:
+            return _party_apply_jit(vfl, w_m, prep.us, coeff)
+    coeffs = jnp.asarray([
+        ex.coefficient(h_bars[k] + vfl.lam * prep.regs[k],
+                       h + vfl.lam * prep.reg0)
+        for k in range(vfl.num_directions)], jnp.float32)
+    with _JAX_LOCK:
+        return _party_apply_k_jit(vfl, w_m, prep.us, coeffs)
+
+
 class _Server:
     """Holds w0 + the latest c table; all access behind one lock (the MPI
     process would serialize the same way). Receives the party's typed
@@ -171,7 +278,10 @@ class _Server:
         self.vfl = vfl
         self.ex = ex
         self.channel = channel
-        self.lock = threading.Lock()
+        # reentrant: the TCP runtime wraps handle() plus its own reply
+        # bookkeeping in ONE critical section (snapshot atomicity), and
+        # handle() takes this lock again internally
+        self.lock = threading.RLock()
         self.w0 = model.init_server(key)
         # the server's own perturbation stream derives from the TRAINER
         # seed (folded per update in handle) — a constant base key here
@@ -266,12 +376,13 @@ class HostAsyncTrainer:
         self.channel = channel if channel is not None else InMemoryChannel()
         self.exchange = ZOExchange.from_config(vfl, meter=CommsMeter())
         q = model.num_parties
-        keys = jax.random.split(jax.random.key(seed), q + 2)
-        self.server = _Server(model, vfl, len(self.y), keys[0],
-                              self.exchange, pert_key=keys[q + 1],
+        server_key, party_keys, pert_key = trainer_keys(seed, q)
+        self.server = _Server(model, vfl, len(self.y), server_key,
+                              self.exchange, pert_key=pert_key,
                               channel=self.channel)
         self.server.y = jnp.asarray(self.y)
-        self.party_w = [model.init_party(keys[m + 1], m) for m in range(q)]
+        self.party_w = [model.init_party(party_keys[m], m)
+                        for m in range(q)]
         self._party_round = [0] * q
         self._spent = False
 
@@ -325,65 +436,25 @@ class HostAsyncTrainer:
         c_hat_up Messages, receive the loss_down Message, form the
         coefficient(s), apply the block update. `key` drives the
         perturbation direction (and, for the stochastic codec, the
-        rounding)."""
-        vfl, ex = self.vfl, self.exchange
-        w_m = self.party_w[m]
+        rounding). The three halves are the module-level helpers above so
+        the TCP runtime runs the identical math."""
         rnd = self._party_round[m]
         self._party_round[m] += 1
-        idx = np.asarray(idx)
-        if vfl.num_directions == 1:
-            with _JAX_LOCK:
-                x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
-                c, c_hat, reg0, reg1, u = _party_fused_jit(
-                    self.model, vfl, w_m, x_m, key, m)
-                wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
-                wire_c_hat = ex.encode_up(c_hat, jax.random.fold_in(key, 2))
-                wire_c = jax.tree.map(np.asarray, wire_c)
-                wire_hats = [jax.tree.map(np.asarray, wire_c_hat)]
-                regs = [float(reg1)]
-        else:
-            with _JAX_LOCK:
-                x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
-                c, c_hats, reg0, regs_k, us, keys = _party_fused_k_jit(
-                    self.model, vfl, w_m, x_m, key, m)
-                wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
-                wire_c = jax.tree.map(np.asarray, wire_c)
-                # each direction's upload is its OWN message with its own
-                # rounding key (fold_name(k_dir, 'codec_hat'), matching
-                # the device-scan path's per-direction independence)
-                wire_hats = [
-                    jax.tree.map(np.asarray, ex.encode_up(
-                        c_hats[k], fold_name(keys[k], "codec_hat")))
-                    for k in range(vfl.num_directions)]
-                regs = [float(r) for r in np.asarray(regs_k)]
+        prep = party_round_prepare(self.model, self.vfl, self.exchange,
+                                   self.party_w[m], self.X, idx, key, m)
         # simulated local compute cost (scales with the block dim)
         t = self.compute_cost_s * self.straggler.get(m, 1.0)
         if t > 0:
             time.sleep(t)
-        me = party(m)
-        msg_c = self.channel.send(Message.make(
-            "c_up", me, SERVER, rnd, wire_c, meta={"idx": idx}))
-        msg_hats = tuple(self.channel.send(Message.make(
-            "c_hat_up", me, SERVER, rnd, w, meta={"idx": idx, "dir": k}))
-            for k, w in enumerate(wire_hats))
+        msg_c, msg_hats = party_round_messages(self.channel, m, rnd, idx,
+                                               prep)
         down = self.server.handle(msg_c, msg_hats)
-        h, *h_bars = down.scalars()
-        if vfl.num_directions == 1:
-            coeff = ex.coefficient(h_bars[0] + vfl.lam * regs[0],
-                                   h + vfl.lam * float(reg0))
-            with _JAX_LOCK:
-                self.party_w[m] = _party_apply_jit(vfl, w_m, u, coeff)
-        else:
-            coeffs = jnp.asarray([
-                ex.coefficient(h_bars[k] + vfl.lam * regs[k],
-                               h + vfl.lam * float(reg0))
-                for k in range(vfl.num_directions)], jnp.float32)
-            with _JAX_LOCK:
-                self.party_w[m] = _party_apply_k_jit(vfl, w_m, us, coeffs)
+        self.party_w[m] = party_round_apply(self.vfl, self.exchange,
+                                            self.party_w[m], prep,
+                                            down.scalars())
 
     def _party_update(self, m: int, rng: np.random.Generator):
-        idx = rng.integers(0, len(self.y), self.batch_size)
-        key = jax.random.key(rng.integers(1 << 31))
+        idx, key = draw_round(rng, len(self.y), self.batch_size)
         self.party_step(m, idx, key)
 
     def _claim_update(self, total_updates: int) -> bool:
@@ -407,7 +478,7 @@ class HostAsyncTrainer:
         threads = []
 
         def loop(m):
-            rng = np.random.default_rng(self.seed * 97 + m)
+            rng = np.random.default_rng(party_rng_seed(self.seed, m))
             while self._claim_update(total_updates):
                 self._party_update(m, rng)
 
@@ -432,7 +503,7 @@ class HostAsyncTrainer:
         errors: list[BaseException] = []
 
         def worker(m):
-            rng = np.random.default_rng(self.seed * 97 + m)
+            rng = np.random.default_rng(party_rng_seed(self.seed, m))
             for _ in range(rounds):
                 try:
                     self._party_update(m, rng)
@@ -462,7 +533,7 @@ class HostAsyncTrainer:
         regression are pinned against."""
         self._start_run()
         q = self.model.num_parties
-        rngs = [np.random.default_rng(self.seed * 97 + m)
+        rngs = [np.random.default_rng(party_rng_seed(self.seed, m))
                 for m in range(q)]
         for _ in range(rounds):
             for m in range(q):

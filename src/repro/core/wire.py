@@ -249,6 +249,17 @@ class Channel:
         self._account(msg, self.transit_s(msg))
         return msg
 
+    def observe(self, msg: Message) -> Message:
+        """Pass a message RECEIVED from a real transport through this
+        channel stack. In the single-process executors one channel object
+        sees both directions of every link, so its counters/transcript
+        cover the whole protocol; in the multi-process runtime
+        (repro/runtime) each endpoint owns its own stack and routes
+        incoming socket messages through it with this alias — the
+        endpoint's accounting and RecordingChannel transcript then match
+        the simulated single-channel view of its links exactly."""
+        return self.send(msg)
+
 
 class InMemoryChannel(Channel):
     """Today's behavior: free, instant transport. Executor runs over this

@@ -84,11 +84,45 @@ def parse_args(argv=None):
                    help="price the vfl-zoo run's wire traffic on a "
                         "NetworkChannel profile (configs.NETWORK_PROFILES)"
                         " and report the simulated transport time")
+    p.add_argument("--transport", default="memory",
+                   choices=["memory", "tcp"],
+                   help="memory: in-process executors over the simulated "
+                        "wire; tcp: the multi-process federation runtime "
+                        "(repro/runtime) — server + one OS process per "
+                        "party over real sockets (docs/runtime.md)")
+    p.add_argument("--dropout-at", type=int, default=None,
+                   help="tcp only: scripted fault — crash party 0 at "
+                        "this round and rejoin it from checkpoint")
     p.add_argument("--mu", type=float, default=1e-3)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--resume", action="store_true",
+                   help="restore from --ckpt-dir at latest_step before "
+                        "training (all modes; with --transport tcp every "
+                        "process restores its own state)")
     p.add_argument("--log-every", type=int, default=10)
-    return p.parse_args(argv)
+    args = p.parse_args(argv)
+
+    # incoherent combinations die HERE with a clear argparse error, not
+    # deep inside jax/socket setup
+    if args.transport == "tcp":
+        if args.mode != "vfl-zoo":
+            p.error("--transport tcp runs the federated protocol; "
+                    "it requires --mode vfl-zoo")
+        if args.data_parallel > 1:
+            p.error("--transport tcp runs parties as separate OS "
+                    "processes; --data-parallel shards the in-process "
+                    "scan trainer — the two paths are mutually exclusive")
+        if args.network:
+            p.error("--network prices a SIMULATED channel; the tcp "
+                    "transport measures real socket traffic — drop one "
+                    "of the two flags")
+    if args.dropout_at is not None and args.transport != "tcp":
+        p.error("--dropout-at injects a process crash; it requires "
+                "--transport tcp")
+    if args.resume and not args.ckpt_dir:
+        p.error("--resume restores from --ckpt-dir; pass --ckpt-dir")
+    return args
 
 
 def make_batch_arrays(cfg, n, seq_len, seed):
@@ -105,9 +139,51 @@ def make_batch_arrays(cfg, n, seq_len, seed):
     return data
 
 
+def run_tcp(args, cfg, log):
+    """--transport tcp: the multi-process federation runtime. The server
+    and each party are separate OS processes over real sockets running
+    the paper's scalar-c host protocol; the arch sets the vertical
+    feature width (d_model). Checkpoint/resume and scripted dropout are
+    wired through repro/runtime (docs/runtime.md)."""
+    from repro.configs import RuntimeConfig
+    from repro.runtime import (FailurePlan, PartyFault, history_losses,
+                               run_federation)
+
+    spec = {"kind": "lr", "parties": args.parties,
+            "features": cfg.d_model, "samples": max(64, args.batch_size * 8),
+            "batch": args.batch_size, "seed": args.seed,
+            "vfl": {"mu": args.mu, "lr_party": args.lr,
+                    "lr_server": args.lr / args.parties}}
+    plan = FailurePlan()
+    if args.dropout_at is not None:
+        plan = FailurePlan({0: PartyFault(crash_at_round=args.dropout_at)})
+    # the federation deadline scales with the requested work — the
+    # default 300 s hard wall would kill any long run; 2 s per round
+    # comfortably covers socket round-trips + per-process jit compiles
+    cfg_rt = RuntimeConfig(
+        deadline_s=max(300.0, 120.0 + 2.0 * args.steps * args.parties))
+    res = run_federation(spec, rounds=args.steps, plan=plan, cfg=cfg_rt,
+                         ckpt_root=args.ckpt_dir, resume=args.resume)
+    h = history_losses(res)
+    srv = res["server"]
+    # a --resume of an already-complete federation has no new rounds
+    final_h = float(h[-1]) if len(h) else float("nan")
+    log.log(args.steps, transport="tcp", updates=srv["updates"],
+            h=final_h, rejoins=res["rejoins"],
+            disconnects=srv["disconnects"],
+            wire_up_bytes=sum(srv["bytes_by_kind"].get(k, 0)
+                              for k in ("c_up", "c_hat_up")),
+            wire_down_bytes=srv["bytes_by_kind"].get("loss_down", 0),
+            socket_bytes=srv["socket_bytes_in"] + srv["socket_bytes_out"])
+    return final_h
+
+
 def main(argv=None):
     args = parse_args(argv)
     cfg = get_config(args.arch, reduced=args.reduced)
+    if args.transport == "tcp":
+        return run_tcp(args, cfg,
+                       MetricLogger(f"train:{args.arch}:vfl-zoo-tcp"))
     model = build_model(cfg)
     log = MetricLogger(f"train:{args.arch}:{args.mode}")
     key = jax.random.key(args.seed)
@@ -120,20 +196,42 @@ def main(argv=None):
         sched = make_schedule(sched_name, args.lr, args.steps,
                               warmup=max(1, args.steps // 20))
         state = step_lib.make_train_state(model, key)
-        train_step = jax.jit(step_lib.make_train_step(model, sched))
+        start_step = 0
         rng = np.random.default_rng(args.seed)
+        if args.resume:
+            from repro.checkpoint import latest_step, restore_checkpoint
+            step0 = latest_step(args.ckpt_dir)
+            if step0 is not None:
+                restored, _ = restore_checkpoint(
+                    args.ckpt_dir,
+                    {"params": state.params, "opt": state.opt}, step0)
+                # a CONTINUATION, not a warm-started replay: optimizer
+                # moments and the schedule step resume where they were,
+                # and the data stream fast-forwards past consumed batches
+                state = step_lib.TrainState(
+                    restored["params"], restored["opt"],
+                    jnp.asarray(step0, jnp.int32))
+                start_step = step0
+                for _ in range(step0):
+                    rng.integers(0, n, args.batch_size)
+                log.log(0, resumed_from=step0)
+        train_step = jax.jit(step_lib.make_train_step(model, sched))
         t0 = time.perf_counter()
         for s in range(args.steps):
             idx = rng.integers(0, n, args.batch_size)
             batch = jax.tree.map(lambda a: a[idx], data)
             state, (loss, metrics) = train_step(state, batch)
             if s % args.log_every == 0 or s == args.steps - 1:
-                log.log(s, loss=loss, ce=metrics["ce"], aux=metrics["aux"],
-                        lr=sched(s))
+                log.log(start_step + s, loss=loss, ce=metrics["ce"],
+                        aux=metrics["aux"], lr=sched(start_step + s))
         dt = time.perf_counter() - t0
         log.log(args.steps, done=1, steps_per_s=args.steps / dt)
         if args.ckpt_dir:
-            save_checkpoint(args.ckpt_dir, args.steps, state.params,
+            # a resumed run commits PAST the restored step, or the next
+            # resume would restore the pre-continuation checkpoint and
+            # silently discard this run's work
+            save_checkpoint(args.ckpt_dir, start_step + args.steps,
+                            {"params": state.params, "opt": state.opt},
                             {"arch": args.arch, "mode": "lm"})
         return float(loss)
 
@@ -152,8 +250,33 @@ def main(argv=None):
                 devices=len(jax.devices()))
     vm, init, step = step_lib.make_vfl_zoo_step(model, vfl, mesh=mesh)
     state = init(key)
-    zoo_step = jax.jit(step)
+    start_step = 0
     rng = np.random.default_rng(args.seed)
+    if args.resume:
+        from repro.checkpoint import latest_step, restore_checkpoint
+        step0 = latest_step(args.ckpt_dir)
+        if step0 is not None:
+            start_step = step0
+            restored, _ = restore_checkpoint(
+                args.ckpt_dir,
+                {"w0": state.w0, "parties": state.parties,
+                 "hist": state.hist}, step0)
+            # the FULL AsyState: hist (the tau-delay ring buffer) is
+            # checkpointed too — rebuilding it from the restored blocks
+            # would hand the first tau resumed steps fresher stale
+            # params than the uninterrupted run saw. step continues at
+            # step0 (asyrevel_step folds the perturbation key by
+            # state.step — restarting at 0 would REPLAY the original
+            # direction sequence, not continue it) and the batch stream
+            # fast-forwards past consumed draws.
+            state = state._replace(w0=restored["w0"],
+                                   parties=restored["parties"],
+                                   hist=restored["hist"],
+                                   step=jnp.asarray(step0, jnp.int32))
+            for _ in range(step0):
+                rng.integers(0, n, args.batch_size)
+            log.log(0, resumed_from=step0)
+    zoo_step = jax.jit(step)
     losses = []
     for s in range(args.steps):
         idx = rng.integers(0, n, args.batch_size)
@@ -161,7 +284,7 @@ def main(argv=None):
         state, h = zoo_step(state, batch)
         losses.append(float(h))
         if s % args.log_every == 0 or s == args.steps - 1:
-            log.log(s, h=h)
+            log.log(start_step + s, h=h)
     if args.network:
         # the scan trainer exchanges the same per-round payloads as the
         # host executor; price them on the chosen channel profile so the
@@ -189,8 +312,9 @@ def main(argv=None):
                 wire_up_mb=ch.up_bytes / 1e6,
                 wire_down_bytes=ch.down_bytes)
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, args.steps,
-                        {"w0": state.w0, "parties": state.parties},
+        save_checkpoint(args.ckpt_dir, start_step + args.steps,
+                        {"w0": state.w0, "parties": state.parties,
+                         "hist": state.hist},
                         {"arch": args.arch, "mode": "vfl-zoo"})
     return losses[-1]
 

@@ -1,0 +1,13 @@
+"""Multi-process federation runtime: the AsyREVEL server and each party
+as separate OS processes over TCP, behind the same typed Message/Channel
+seam as the in-process executors (docs/runtime.md)."""
+from repro.runtime.failures import (CRASH_EXIT_CODE, NO_FAILURES,  # noqa
+                                    FailurePlan, PartyFault)
+from repro.runtime.harness import (history_losses, run_federation,  # noqa
+                                   run_reference)
+from repro.runtime.server import FederationError, RuntimeServer  # noqa
+from repro.runtime.transport import (ConnectionClosed, FramedSocket,  # noqa
+                                     TransportError, TransportTimeout,
+                                     WireFormatError, WIRE_VERSION,
+                                     connect_with_retry, decode_message,
+                                     encode_message)

@@ -1,0 +1,51 @@
+"""Scripted fault injection for the multi-process runtime.
+
+The paper's asynchrony claims are about parties that stall, drop, and
+rejoin; this module makes those events *scripted scenario inputs* so
+async-vs-sync degradation and checkpointed recovery are measurable
+rather than anecdotal:
+
+  * ``crash_at_round=r`` — the party process exits abruptly
+    (``os._exit``, no goodbye, no flushing) at the START of local round
+    r. The supervisor respawns it ``rejoin_delay_s`` later with
+    ``resume=True``, and it restores its block from its latest
+    checkpoint, fast-forwards its private RNG stream past the completed
+    rounds, and resends any round the server may or may not have seen —
+    the server's duplicate-detection answers replayed rounds from its
+    reply cache without advancing state, which is what makes recovery
+    lossless.
+  * ``slow_send_s`` — a straggler link: the party sleeps that long
+    before each round's uploads. Under the 'serial' schedule everyone
+    waits for it (SynREVEL's degradation); under 'arrival' only its own
+    rounds are late (AsyREVEL's win).
+
+A crashed party is only respawned ``max_rejoins`` times; a party that
+keeps dying fails the whole federation at the harness deadline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+# Distinct exit code for a SCRIPTED crash so the supervisor can tell
+# fault injection apart from a genuine party bug (which also gets
+# respawned if the plan allows, but is logged differently).
+CRASH_EXIT_CODE = 37
+
+
+@dataclass(frozen=True)
+class PartyFault:
+    crash_at_round: int | None = None
+    rejoin_delay_s: float = 0.5
+    max_rejoins: int = 1
+    slow_send_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class FailurePlan:
+    faults: dict = field(default_factory=dict)    # party index -> PartyFault
+
+    def fault_for(self, m: int) -> PartyFault | None:
+        return self.faults.get(m)
+
+
+NO_FAILURES = FailurePlan()

@@ -1,0 +1,57 @@
+"""Problem specs: every process of a federation rebuilds the SAME
+(model, vfl config, data) from one small JSON-able dict.
+
+A real deployment ships each party only its private feature slice; here
+every process regenerates the full synthetic dataset from the spec's
+seed and then touches only what its role may see (a party slices its own
+features, the server holds the labels). The spec crosses the process
+boundary instead of arrays — deterministic reconstruction is what makes
+the TCP run bit-comparable to the in-process reference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import VFLConfig
+from repro.configs.paper_models import PaperFCNConfig, PaperLRConfig
+from repro.core.vfl import PaperFCNModel, PaperLRModel, pad_features
+
+
+@dataclass
+class Problem:
+    model: object
+    vfl: VFLConfig
+    X: np.ndarray
+    y: np.ndarray
+    batch_size: int
+    seed: int
+
+
+def build_problem(spec: dict) -> Problem:
+    """spec = {kind: 'lr'|'fcn', parties, features, samples, batch, seed,
+    vfl: {mu, lr_party, codec, num_directions, ...}}."""
+    kind = spec.get("kind", "lr")
+    q = int(spec.get("parties", 2))
+    d = int(spec.get("features", 16))
+    n = int(spec.get("samples", 128))
+    seed = int(spec.get("seed", 0))
+    batch = int(spec.get("batch", 8))
+    vfl = VFLConfig(num_parties=q, **spec.get("vfl", {}))
+    key = jax.random.key(seed)
+    if kind == "lr":
+        model = PaperLRModel(PaperLRConfig(num_features=d, num_parties=q))
+        X = pad_features(jax.random.normal(key, (n, d)), d, q)
+        y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (n,)))
+    elif kind == "fcn":
+        classes = int(spec.get("classes", 10))
+        model = PaperFCNModel(PaperFCNConfig(
+            num_features=d, num_parties=q, num_classes=classes))
+        X = pad_features(jax.random.normal(key, (n, d)), d, q)
+        y = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, classes)
+    else:
+        raise ValueError(f"unknown problem kind {kind!r}; have lr, fcn")
+    return Problem(model, vfl, np.asarray(X), np.asarray(y), batch, seed)

@@ -53,6 +53,55 @@ def test_empty_dir_raises(tmp_path):
         restore_checkpoint(str(tmp_path), {"w": jnp.zeros((1,))})
 
 
+def test_latest_step_ignores_stray_tmp_files(tmp_path):
+    """Satellite: partial writes left by killed writers (mkstemp *.tmp
+    files — even ones embedding step-like names) must never surface as
+    committed steps."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 3, tree)
+    (tmp_path / "tmpabc123.tmp").write_bytes(b"partial npz write")
+    (tmp_path / "step_00000099.npz.tmp").write_bytes(b"killed mid-rename")
+    assert latest_step(str(tmp_path)) == 3
+    _, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 3
+
+
+def test_metadata_write_is_atomic_and_ordered(tmp_path):
+    """Satellite: metadata commits via tmp+rename BEFORE the npz rename,
+    so no observable step ever lacks its metadata — the crash window the
+    runtime's resume path depends on closing."""
+    import json
+    import os
+    from unittest import mock
+
+    from repro.checkpoint import load_metadata
+
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 7, tree, {"updates": 7})
+    assert load_metadata(str(tmp_path), 7) == {"updates": 7}
+    # no tmp litter after a clean save
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+    # crash injected at the npz rename (the commit point): the step must
+    # remain invisible — json already durable, npz absent
+    real_replace = os.replace
+
+    def exploding_replace(src, dst):
+        if dst.endswith(".npz"):
+            raise RuntimeError("injected crash before npz commit")
+        return real_replace(src, dst)
+
+    with mock.patch("repro.checkpoint.ckpt.os.replace",
+                    side_effect=exploding_replace):
+        with pytest.raises(RuntimeError):
+            save_checkpoint(str(tmp_path), 8, tree, {"updates": 8})
+    assert latest_step(str(tmp_path)) == 7          # step 8 never visible
+    with open(tmp_path / "step_00000008.json") as f:
+        assert json.load(f) == {"updates": 8}       # metadata committed
+    # and the stray npz tmp never confuses discovery
+    assert latest_step(str(tmp_path)) == 7
+
+
 def test_model_params_roundtrip(tmp_path):
     from repro.configs import get_config
     from repro.models import build_model

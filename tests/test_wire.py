@@ -58,6 +58,74 @@ def test_party_endpoint_roundtrip():
         wire.party_index(SERVER)
 
 
+# ------------------------------------------- runtime wire codec (PR 4) ----
+
+def _codec_payload(codec, shape=(8,), key=None):
+    """A realistic encoded up-link payload for each codec."""
+    from repro.core.exchange import get_codec
+    c = jnp.arange(1, 1 + int(np.prod(shape)),
+                   dtype=jnp.float32).reshape(shape) / 7.0
+    wire = get_codec(codec).encode(c, key)
+    return jax.tree.map(np.asarray, wire)
+
+
+@pytest.mark.parametrize("codec", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("kind", list(wire.KINDS))
+def test_wire_codec_roundtrip_every_kind_and_codec(codec, kind):
+    """Satellite: every Message kind x payload codec encodes/decodes
+    byte-identically through the runtime's versioned wire codec, and the
+    decoded nbytes equals wire_nbytes of the original payload."""
+    from repro.core.exchange import wire_nbytes
+    from repro.runtime.transport import decode_message, encode_message
+    if kind == "loss_down":
+        payload = (0.5, 0.25, float(np.float32(1 / 3)))
+    elif kind in ("grad_down", "param_down"):
+        payload = np.linspace(-1, 1, 12, dtype=np.float32)
+    else:
+        payload = _codec_payload(codec, key=jax.random.key(0))
+    sender, receiver = ((party(1), SERVER) if kind in wire.UP_KINDS
+                        else (SERVER, party(1)))
+    msg = Message.make(kind, sender, receiver, 9, payload,
+                       meta={"idx": np.arange(4), "dir": 2})
+    buf = encode_message(msg)
+    assert encode_message(msg) == buf            # deterministic bytes
+    got = decode_message(buf)
+    assert (got.kind, got.sender, got.receiver, got.round) == \
+        (kind, sender, receiver, 9)
+    assert got.nbytes == msg.nbytes
+    if kind == "loss_down":
+        assert got.nbytes == 3 * 4
+        assert got.scalars() == msg.scalars()    # f32-exact scalars
+    else:
+        assert got.nbytes == wire_nbytes(payload)
+        la = [np.asarray(x) for x in jax.tree.leaves(payload)]
+        lb = [np.asarray(x) for x in jax.tree.leaves(got.payload)]
+        for a, b in zip(la, lb):
+            assert a.dtype == b.dtype
+            assert a.tobytes() == b.tobytes()    # byte-identical
+    np.testing.assert_array_equal(got.meta["idx"], msg.meta["idx"])
+    assert got.meta["dir"] == 2
+
+
+def test_wire_codec_rejects_nbytes_mismatch():
+    """The measured-bytes contract is VALIDATED at the socket: a message
+    whose declared nbytes disagrees with the payload bytes that would
+    hit the wire refuses to encode, and a tampered frame refuses to
+    decode."""
+    from repro.runtime.transport import (WireFormatError, decode_message,
+                                         encode_message)
+    bad = Message("c_up", party(0), SERVER, 0, np.zeros(4, np.float32),
+                  nbytes=99, meta=None)
+    with pytest.raises(WireFormatError):
+        encode_message(bad)
+    good = encode_message(Message.make(
+        "c_up", party(0), SERVER, 0, np.zeros(4, np.float32)))
+    with pytest.raises(WireFormatError):
+        decode_message(b"XX" + good[2:])         # bad magic
+    with pytest.raises(WireFormatError):
+        decode_message(good[:2] + b"\x07" + good[3:])   # bad version
+
+
 # ----------------------------------------------------------- transcript ---
 
 def test_transcript_views_are_what_each_endpoint_observes():
