@@ -36,6 +36,9 @@ SUITES = {
     "runtime": ("benchmarks.bench_runtime",
                 "Multi-process TCP runtime vs in-memory executor",
                 "runtime"),
+    "dp": ("benchmarks.bench_dp",
+           "DP defense: measured privacy/utility frontier vs epsilon",
+           "dp"),
 }
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -174,6 +174,70 @@ INPUT_SHAPES = {
 
 
 @dataclass(frozen=True)
+class DPConfig:
+    """Differential privacy at the codec seam (src/repro/dp, docs/dp.md).
+
+    The defended release is every party->server payload (the c function
+    values): each per-sample entry is clipped to ``[-clip, clip]`` and
+    perturbed with mechanism noise of scale ``noise_multiplier * clip``
+    BEFORE the up-link codec runs — DPZV-style, at the single
+    ``ZOExchange.encode_up`` seam every executor shares.
+
+    ``epsilon`` is the per-party (eps, delta)-DP target over a whole run
+    (parallel composition across parties: feature blocks are disjoint,
+    so each party's guarantee depends only on its OWN releases);
+    ``epsilon=inf`` turns the subsystem transparently off (no clip, no
+    noise — bit-identical to ``dp=None``). ``noise_multiplier`` is the
+    resolved noise scale in clip units; leave it ``None`` and let
+    ``repro.dp.accountant.resolve_dp(dp, rounds=...)`` calibrate it from
+    the target epsilon once the round budget is known — the exchange
+    refuses to run with an uncalibrated target.
+    """
+    epsilon: Optional[float] = None     # target eps over the run (inf = off)
+    delta: float = 1e-5
+    clip: Optional[float] = None        # REQUIRED when enabled: |c_i| <= clip
+    mechanism: str = "gaussian"         # gaussian (RDP) | laplace (pure-DP)
+    noise_multiplier: Optional[float] = None   # sigma; noise std = sigma*clip
+
+    def __post_init__(self):
+        if self.mechanism not in ("gaussian", "laplace"):
+            raise ValueError(
+                f"unknown DP mechanism {self.mechanism!r}; "
+                f"have gaussian, laplace")
+        if self.epsilon is not None and self.epsilon <= 0:
+            raise ValueError(f"epsilon must be > 0, got {self.epsilon}")
+        if not 0.0 < self.delta < 1.0:
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+        if self.noise_multiplier is not None and self.noise_multiplier < 0:
+            raise ValueError("noise_multiplier must be >= 0")
+        import math
+        if (self.noise_multiplier == 0.0 and self.epsilon is not None
+                and math.isfinite(self.epsilon)):
+            raise ValueError(
+                "noise_multiplier=0 (clip-only) cannot meet a finite "
+                "epsilon target — drop the epsilon or supply real noise")
+        if self.enabled and self.clip is None:
+            raise ValueError(
+                "DP epsilon/noise without a clip bound is incoherent: the "
+                "mechanism's sensitivity IS the clip — set DPConfig.clip")
+        if self.clip is not None and self.clip <= 0:
+            raise ValueError(f"clip must be > 0, got {self.clip}")
+
+    @property
+    def enabled(self) -> bool:
+        """Whether any defense actually applies (eps=inf means OFF)."""
+        import math
+        if self.noise_multiplier is not None:
+            return True
+        return self.epsilon is not None and math.isfinite(self.epsilon)
+
+    @property
+    def resolved(self) -> bool:
+        """Whether the noise scale is known (ready to run)."""
+        return not self.enabled or self.noise_multiplier is not None
+
+
+@dataclass(frozen=True)
 class VFLConfig:
     """The paper's framework knobs (Section 3)."""
     num_parties: int = 8          # q
@@ -194,6 +258,8 @@ class VFLConfig:
     perturb_server: bool = True   # also ZO-update w_0 (Eq. 17)
     codec: str = "f32"            # up-link payload codec for the c values
     #                               (core/exchange.py: f32 | bf16 | int8)
+    dp: Optional[DPConfig] = None  # clip-then-noise defense at the codec
+    #                               seam (src/repro/dp; None = undefended)
 
 
 @dataclass(frozen=True)
@@ -235,10 +301,16 @@ class RuntimeConfig:
     bit-identical to ``HostAsyncTrainer.run_serial``), 'arrival'
     processes complete rounds in the order they arrive off the sockets
     (AsyREVEL's asynchrony: fast parties never wait for stragglers).
+
+    ``max_staleness`` enforces the paper's tau bound (Assumption 4) on
+    the 'arrival' schedule: a round that would race more than tau rounds
+    ahead of the slowest party is PARKED until the laggard catches up
+    (None = trust the parties, the pre-enforcement behavior).
     """
     host: str = "127.0.0.1"
     port: int = 0                 # 0 = OS-assigned (reported to parties)
     schedule: str = "serial"      # serial | arrival
+    max_staleness: Optional[int] = None   # tau (Assumption 4); None = off
     request_timeout_s: float = 15.0   # per recv on an open connection
     max_retries: int = 4          # reply waits before a party gives up
     connect_retries: int = 60     # dial attempts (server may start late)

@@ -15,7 +15,10 @@ transcripts, replay, and the bit-identity regression.
 
 The message round itself (perturbation, up-link codec, coefficient, update
 apply) is the SAME core/exchange.py ZOExchange the device-scan trainer in
-asyrevel.py uses. Every boundary crossing is a typed ``core/wire.py``
+asyrevel.py uses — including the optional DP defense (``VFLConfig.dp``,
+src/repro/dp): ``encode_up`` clips-then-noises every upload before the
+codec, keyed off the same per-round keys, so defended runs stay
+bit-identical across the memory and TCP transports. Every boundary crossing is a typed ``core/wire.py``
 Message routed through the trainer's ``Channel``:
 
     party m --c_up, c_hat_up (xK)--> server --loss_down (h, h_bar_1..K)--> m

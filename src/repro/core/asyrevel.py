@@ -257,15 +257,18 @@ class ShardFoldedExchange(ZOExchange):
     slices of one upload carry INDEPENDENT stochastic-rounding draws —
     the per-direction independence fix, applied along the shard axis
     (the replicated step key would otherwise hand every shard the same
-    noise realization). Only constructed for dp > 1: fold_in(key, 0) is
-    not the identity, so using it on a 1-device mesh would break the
+    noise realization). The DP-noise stream folds the same way (the
+    base's ``dp`` config is inherited and ``_dp_key`` routes through
+    ``_codec_key``), so per-shard slices of a defended upload are
+    independent releases. Only constructed for dp > 1: fold_in(key, 0)
+    is not the identity, so using it on a 1-device mesh would break the
     bit-parity with the single-device scan."""
 
     def __init__(self, base: ZOExchange, axis_name: str):
         super().__init__(mu=base.mu, direction=base.direction,
                          lam=base.lam, num_directions=base.num_directions,
                          seed_replay=base.seed_replay, codec=base.codec,
-                         meter=None)
+                         meter=None, dp=base.dp)
         self.axis_name = axis_name
 
     def _codec_key(self, key):

@@ -29,6 +29,20 @@ counts are MEASURED from the encoded wire arrays (``wire_nbytes``), not
 hand-derived; ``core/comms.py``'s analytic PRCO formulas are validated
 against these counters in tests/test_exchange.py.
 
+Differential privacy rides the same seam: with ``dp`` set (a
+``configs.DPConfig`` with a resolved noise multiplier — see
+``repro.dp``), every up-link payload is clipped-then-noised BEFORE the
+codec runs, in both the measured ``encode_up`` path and the jit-traced
+``roundtrip_up`` path, with noise keys derived from the same per-round
+keys the stochastic codec uses. A defended in-memory host run and a
+defended TCP run of one seed are therefore bit-identical (they execute
+the same helpers with the same keys — pinned in tests/test_dp.py); the
+scan trainer is seed-deterministic too but keys its uploads per STEP
+(its own schedule), so it is not noise-identical to the host executors,
+exactly as its undefended trajectory already differs from theirs.
+``dp=None`` — or a disabled config (eps=inf) — is byte-for-byte the
+undefended code path.
+
 Inside jit/scan the per-round payload size is static, so jit paths use
 ``round_comms()`` (shape-derived, same arithmetic as the measured path);
 the threaded host executor attaches a ``CommsMeter`` and accumulates the
@@ -46,6 +60,7 @@ from repro.configs.base import VFLConfig
 from repro.core import zoo
 from repro.core.comms import RoundComms
 from repro.kernels import ops as kernel_ops
+from repro.utils.prng import fold_name
 
 SCALAR_BYTES = 4          # every function value on the wire is one f32
 
@@ -187,7 +202,7 @@ class ZOExchange:
     def __init__(self, mu: float, direction: str = "gaussian",
                  lam: float = 0.0, num_directions: int = 1,
                  seed_replay: bool = False, codec="f32",
-                 meter: CommsMeter | None = None):
+                 meter: CommsMeter | None = None, dp=None):
         self.mu = mu
         self.direction = direction
         self.lam = lam
@@ -195,6 +210,16 @@ class ZOExchange:
         self.seed_replay = seed_replay
         self.codec = get_codec(codec)
         self.meter = meter
+        # a disabled DPConfig (eps=inf) normalizes to None so the
+        # defended-off exchange IS the undefended one (same hash, same
+        # code path — the eps=inf bit-identity claim by construction)
+        self.dp = dp if (dp is not None and dp.enabled) else None
+        if self.dp is not None and not self.dp.resolved:
+            raise ValueError(
+                "DPConfig has a target epsilon but no noise_multiplier — "
+                "calibrate it first via repro.dp.accountant.resolve_dp(dp, "
+                "rounds=...) (the launcher/harness does this where the "
+                "round budget is known)")
 
     @classmethod
     def from_config(cls, vfl: VFLConfig,
@@ -202,7 +227,8 @@ class ZOExchange:
         return cls(mu=vfl.mu, direction=vfl.direction, lam=vfl.lam,
                    num_directions=vfl.num_directions,
                    seed_replay=vfl.seed_replay,
-                   codec=getattr(vfl, "codec", "f32"), meter=meter)
+                   codec=getattr(vfl, "codec", "f32"), meter=meter,
+                   dp=getattr(vfl, "dp", None))
 
     # ---- wire: party -> server (Algorithm 1 line 5) ----------------------
     def _codec_key(self, key):
@@ -212,9 +238,31 @@ class ZOExchange:
         rounding noise (core/asyrevel.ShardFoldedExchange)."""
         return key
 
+    def _dp_key(self, key):
+        """The DP-noise key of one release: independent of the codec
+        rounding stream (named fold), then the same shard fold — a
+        data-parallel party's per-shard slices are separate releases
+        and must draw independent noise."""
+        if key is None:
+            raise ValueError(
+                "a DP-defended exchange needs the round key on every "
+                "up-link (the noise draw is keyed like codec rounding)")
+        return self._codec_key(fold_name(key, "dp_noise"))
+
+    def defend(self, c, key):
+        """Clip-then-noise one up-link payload (identity when dp=None).
+        ``key`` is the release's ROUND key — the dp-noise subkey derives
+        inside, so callers pass the same key they pass encode_up."""
+        if self.dp is None:
+            return c
+        from repro.dp.mechanisms import defend_payload
+        return defend_payload(c, self._dp_key(key), self.dp)
+
     def encode_up(self, c, key=None):
-        """Party side: function values -> wire payload (+ measured bytes)."""
-        wire = self.codec.encode(c, self._codec_key(key))
+        """Party side: function values -> wire payload (+ measured bytes).
+        The DP defense (clip-then-noise, repro/dp) applies HERE, before
+        the codec — the one seam every executor's up-link crosses."""
+        wire = self.codec.encode(self.defend(c, key), self._codec_key(key))
         if self.meter is not None:
             self.meter.add_up(wire_nbytes(wire))
         return wire
@@ -224,8 +272,10 @@ class ZOExchange:
         return self.codec.decode(wire)
 
     def roundtrip_up(self, c, key=None):
-        """What the server sees after the up-link (identity for f32)."""
-        return self.codec.roundtrip(c, self._codec_key(key))
+        """What the server sees after the up-link (identity for f32 with
+        dp off) — the jit-traced twin of encode_up + decode_up."""
+        return self.codec.roundtrip(self.defend(c, key),
+                                    self._codec_key(key))
 
     # ---- wire: server -> party (Algorithm 1 line 8) ----------------------
     def send_down(self, *fvals):
@@ -339,7 +389,7 @@ class ZOExchange:
     # Instances hash by semantics so they can ride in jit static args.
     def _hash_key(self):
         return (self.mu, self.direction, self.lam, self.num_directions,
-                self.seed_replay, self.codec.name)
+                self.seed_replay, self.codec.name, self.dp)
 
     def __hash__(self):
         return hash(self._hash_key())

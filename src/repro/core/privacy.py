@@ -40,6 +40,13 @@ remain importable for unit tests; the ``*_attack(transcript, ...)``
 functions are the executor-facing entry points, and
 ``exposure_from_transcript`` derives the paper's Table-1 exposure columns
 from the observed message kinds instead of a hard-coded table.
+
+Every attack here also runs unchanged against DEFENDED transcripts —
+runs whose up-link passed through the repro/dp clip-then-noise seam.
+``label_inference_from_uploads`` (the seam-reading attack the defense is
+calibrated against) and the RMA recovery are the two whose success
+degrades measurably with epsilon; benchmarks/bench_dp.py sweeps that
+frontier from recorded traffic.
 """
 from __future__ import annotations
 
@@ -149,6 +156,50 @@ def label_inference_from_function_values(h, y_true, rng=None):
     pred = np.where(h[:, None] > thresh, 1.0, -1.0)
     acc = np.mean(pred == y[None, :])
     return float(acc)
+
+
+def _decode_c_payload(payload) -> np.ndarray:
+    """Decode a recorded c_up wire payload codec-agnostically: f32/bf16
+    arrays cast to f32; the int8 codec's (values, scale) pair rescales.
+    The adversary sees the wire object, so it decodes like the server."""
+    if isinstance(payload, (tuple, list)) and len(payload) == 2 \
+            and np.ndim(payload[1]) == 0:
+        q, scale = payload
+        return np.asarray(q, np.float32) * np.float32(scale)
+    return np.asarray(payload).astype(np.float32)
+
+
+def label_inference_from_uploads(transcript: Transcript, y_true) -> dict:
+    """Curious SERVER-side label inference from the up-link itself: the
+    per-sample c values are partial logits (c_{i,m} = F_m(x_{i,m})), so
+    an adversary at the seam — a compromised server-side component, or
+    anyone reading the recorded up-link before label custody — sums each
+    sample's freshest per-party c values and thresholds the result. On a
+    trained model this reads the prediction (hence the label) straight
+    off the wire; it is THE attack the codec-seam DP defense (repro/dp)
+    is calibrated against, and its accuracy vs epsilon is the measured
+    privacy side of BENCH_dp.json's frontier. Sign convention follows
+    the paper's LR loss log(1+exp(-y z)): positive aggregate -> y=+1."""
+    ups = transcript.view(wire.SERVER).filter(kind="c_up")
+    latest: dict[tuple, float] = {}
+    for msg in ups:
+        m = wire.party_index(msg.sender)
+        vals = _decode_c_payload(msg.payload).reshape(-1)
+        idx = np.asarray(msg.meta["idx"]).reshape(-1)
+        for i, v in zip(idx, vals):
+            latest[(int(i), m)] = float(v)
+    samples = sorted({i for i, _ in latest})
+    parties = sorted({m for _, m in latest})
+    if not samples:
+        return {"accuracy": 0.5, "samples": 0, "messages": 0,
+                "observable": "c_up"}
+    y = np.sign(np.asarray(y_true, np.float64))
+    logits = np.array([sum(latest.get((i, m), 0.0) for m in parties)
+                       for i in samples])
+    pred = np.where(logits >= 0, 1.0, -1.0)
+    acc = float(np.mean(pred == y[np.asarray(samples)]))
+    return {"accuracy": acc, "samples": len(samples),
+            "messages": len(ups), "observable": "c_up"}
 
 
 def label_inference_attack(transcript: Transcript, y_true,

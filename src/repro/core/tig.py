@@ -167,7 +167,7 @@ class HostTIGTrainer:
     def __init__(self, model: VFLModel, vfl: VFLConfig, X, y,
                  batch_size: int = 32, seed: int = 0,
                  channel: Channel | None = None, black_box: bool = False,
-                 sampler: str = "random"):
+                 sampler: str = "random", dp=None):
         if black_box:
             raise BlackBoxError(
                 "TIG requires dL/dc_m from the server and dc_m/dw_m "
@@ -188,6 +188,12 @@ class HostTIGTrainer:
         self.c_table = np.zeros((len(self.y), q), np.float32)
         self.history: list[float] = []
         self._party_round = [0] * q
+        # optional repro/dp clip-then-noise on the UP-link — the DPZV
+        # comparison: even the gradient-transmitting baseline can defend
+        # its uploads (its grad_down leak is a DOWN-link property the
+        # seam cannot touch). Keyed off (seed, party, round) so the
+        # numpy batch stream is untouched and dp=None stays bit-exact.
+        self.dp = dp if (dp is not None and dp.enabled) else None
 
     def party_step(self, m: int, idx: np.ndarray):
         """One TIG round for party m: c_up -> (grad_down, loss_down) ->
@@ -196,8 +202,13 @@ class HostTIGTrainer:
         rnd = self._party_round[m]
         self._party_round[m] += 1
         x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
-        c = np.asarray(_tig_party_c_jit(self.model, self.party_w[m],
-                                        x_m, m), np.float32)
+        c_dev = _tig_party_c_jit(self.model, self.party_w[m], x_m, m)
+        if self.dp is not None:
+            from repro.dp.mechanisms import defend_payload
+            k = fold_name(jax.random.fold_in(
+                jax.random.key(self.seed * 1009 + m), rnd), "dp_noise")
+            c_dev = defend_payload(c_dev, k, self.dp)
+        c = np.asarray(c_dev, np.float32)
         me = party(m)
         msg_c = self.channel.send(Message.make(
             "c_up", me, SERVER, rnd, c, meta={"idx": idx}))

@@ -1,0 +1,18 @@
+"""Differential-privacy defense subsystem at the codec seam (docs/dp.md).
+
+The paper's Theorem 1 is an argument about what CROSSES the wire; PR 3/4
+built the machinery to record that traffic and attack it. This package
+adds the tunable defense: clip-then-noise mechanisms injected at the one
+``ZOExchange.encode_up`` seam every executor shares (DPZV-style — the
+party->server payload is a low-dimensional function-value vector with a
+boundable per-sample sensitivity), an RDP/moments accountant that turns
+a run's release schedule into an (eps, delta) guarantee and inverts it
+(``calibrate``), and transcript-measured attacks so the privacy/utility
+frontier is a MEASUREMENT (benchmarks/bench_dp.py -> BENCH_dp.json), not
+an analytic claim.
+"""
+from repro.configs.base import DPConfig  # noqa: F401 (canonical home)
+from repro.dp.accountant import (RDPAccountant, account, calibrate,  # noqa
+                                 resolve_dp, resolve_spec_dp)
+from repro.dp.mechanisms import (DPExchange, defend_payload,  # noqa
+                                 noise_scale)

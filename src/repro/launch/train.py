@@ -94,6 +94,18 @@ def parse_args(argv=None):
                    help="tcp only: scripted fault — crash party 0 at "
                         "this round and rejoin it from checkpoint")
     p.add_argument("--mu", type=float, default=1e-3)
+    p.add_argument("--dp-epsilon", type=float, default=None,
+                   help="vfl-zoo only: defend the party->server upload "
+                        "seam with clip-then-noise DP calibrated to this "
+                        "per-party (eps, delta) target over the run "
+                        "(repro/dp, docs/dp.md); 'inf' turns the "
+                        "subsystem transparently off")
+    p.add_argument("--dp-delta", type=float, default=None,
+                   help="DP delta (default 1e-5); requires --dp-epsilon")
+    p.add_argument("--dp-clip", type=float, default=None,
+                   help="per-entry clip bound C on the uploaded c values "
+                        "— the mechanism's sensitivity; REQUIRED with a "
+                        "finite --dp-epsilon")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--resume", action="store_true",
@@ -122,7 +134,43 @@ def parse_args(argv=None):
                 "--transport tcp")
     if args.resume and not args.ckpt_dir:
         p.error("--resume restores from --ckpt-dir; pass --ckpt-dir")
+    # DP defends the vfl-zoo upload seam; incoherent combos die here
+    import math as _math
+    if args.dp_epsilon is not None:
+        if args.mode != "vfl-zoo":
+            p.error("--dp-epsilon defends the party->server upload seam "
+                    "of the vfl-zoo protocol; --mode lm has no federated "
+                    "boundary (and gradient-emitting frameworks like tig "
+                    "leak on the DOWN-link, which upload noise cannot "
+                    "defend — see docs/dp.md)")
+        if args.dp_epsilon <= 0:
+            p.error("--dp-epsilon must be > 0 (use 'inf' to disable)")
+        if _math.isfinite(args.dp_epsilon) and args.dp_clip is None:
+            p.error("--dp-epsilon without --dp-clip is incoherent: the "
+                    "mechanism's sensitivity IS the clip bound")
+    else:
+        if args.dp_clip is not None or args.dp_delta is not None:
+            p.error("--dp-clip/--dp-delta configure the DP mechanism; "
+                    "they require --dp-epsilon")
+    if args.dp_delta is None:
+        args.dp_delta = 1e-5
     return args
+
+
+def make_dp(args):
+    """The run's DPConfig from the --dp-* flags (None when undefended).
+    Calibration to a noise multiplier happens where the round budget is
+    known: resolve_dp here for the in-process path, resolve_spec_dp in
+    the federation harness for --transport tcp. ``--steps`` is the
+    per-party round budget on tcp and a conservative upper bound for the
+    scan trainer (one activated party per step)."""
+    if args.dp_epsilon is None:
+        return None
+    from repro.configs import DPConfig
+    from repro.dp.accountant import resolve_dp
+    return resolve_dp(DPConfig(epsilon=args.dp_epsilon,
+                               delta=args.dp_delta, clip=args.dp_clip),
+                      rounds=args.steps)
 
 
 def make_batch_arrays(cfg, n, seq_len, seed):
@@ -154,6 +202,11 @@ def run_tcp(args, cfg, log):
             "batch": args.batch_size, "seed": args.seed,
             "vfl": {"mu": args.mu, "lr_party": args.lr,
                     "lr_server": args.lr / args.parties}}
+    if args.dp_epsilon is not None:
+        # the TARGET rides the spec; run_federation calibrates the noise
+        # multiplier once and ships the resolved value to every process
+        spec["vfl"]["dp"] = {"epsilon": args.dp_epsilon,
+                             "delta": args.dp_delta, "clip": args.dp_clip}
     plan = FailurePlan()
     if args.dropout_at is not None:
         plan = FailurePlan({0: PartyFault(crash_at_round=args.dropout_at)})
@@ -168,8 +221,10 @@ def run_tcp(args, cfg, log):
     srv = res["server"]
     # a --resume of an already-complete federation has no new rounds
     final_h = float(h[-1]) if len(h) else float("nan")
+    extra = ({"dp_epsilon": args.dp_epsilon}
+             if args.dp_epsilon is not None else {})
     log.log(args.steps, transport="tcp", updates=srv["updates"],
-            h=final_h, rejoins=res["rejoins"],
+            h=final_h, rejoins=res["rejoins"], **extra,
             disconnects=srv["disconnects"],
             wire_up_bytes=sum(srv["bytes_by_kind"].get(k, 0)
                               for k in ("c_up", "c_hat_up")),
@@ -238,8 +293,14 @@ def main(argv=None):
     # --- vfl-zoo: the paper's technique wrapping this architecture -------
     assert cfg.d_model % args.parties == 0, \
         f"--parties must divide d_model={cfg.d_model}"
+    dp = make_dp(args)
     vfl = VFLConfig(num_parties=args.parties, mu=args.mu,
-                    lr_party=args.lr, lr_server=args.lr / args.parties)
+                    lr_party=args.lr, lr_server=args.lr / args.parties,
+                    dp=dp)
+    if dp is not None:
+        log.log(0, dp_epsilon=args.dp_epsilon,
+                dp_sigma=(dp.noise_multiplier
+                          if dp.noise_multiplier is not None else 0.0))
     mesh = None
     if args.data_parallel > 1:
         from repro.launch.mesh import make_data_mesh

@@ -17,10 +17,18 @@ from repro.core.exchange import ZOExchange
 
 
 def zo_sgd_step(loss_fn, params, key, lr: float, mu: float,
-                dist: str = "gaussian", num_directions: int = 1):
-    """params <- params - lr * mean_k coeff_k u_k. Returns (params, loss)."""
-    ex = ZOExchange(mu=mu, direction=dist, num_directions=num_directions,
-                    seed_replay=True)
+                dist: str = "gaussian", num_directions: int = 1,
+                ex: ZOExchange | None = None):
+    """params <- params - lr * mean_k coeff_k u_k. Returns (params, loss).
+
+    ``ex`` injects a pre-built exchange (e.g. a DP-defended one from
+    ``repro.dp``) in place of the default; the centralized path has no
+    wire crossing, so a defended exchange only matters when the caller
+    also routes payloads through ``ex.encode_up``/``roundtrip_up`` —
+    passing it here keeps ONE exchange object across both uses."""
+    if ex is None:
+        ex = ZOExchange(mu=mu, direction=dist,
+                        num_directions=num_directions, seed_replay=True)
     f0 = loss_fn(params)
 
     def one(k):

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import RuntimeConfig
 from repro.core.async_host import HostAsyncTrainer
+from repro.dp.accountant import resolve_spec_dp
 from repro.runtime.failures import NO_FAILURES, FailurePlan
 from repro.runtime.party import party_main
 from repro.runtime.problem import build_problem
@@ -65,6 +66,10 @@ def run_federation(spec: dict, rounds: int, *,
     {m: ...}, 'rejoins': int}. Raises FederationError on deadline or
     party failure the plan does not cover."""
     cfg = cfg or RuntimeConfig()
+    # calibrate any DP target ONCE, in the parent: the resolved noise
+    # multiplier rides the spec to the server and every party process,
+    # so all endpoints derive the identical defended exchange
+    spec = resolve_spec_dp(spec, rounds)
     q = int(spec.get("parties", 2))
     _ensure_child_pythonpath()
     ctx = mp.get_context("spawn")
@@ -177,8 +182,10 @@ def run_federation(spec: dict, rounds: int, *,
 
 def run_reference(spec: dict, rounds: int, channel=None):
     """The in-process deterministic reference for the same spec: returns
-    (trainer, HostRunResult) from HostAsyncTrainer.run_serial."""
-    prob = build_problem(spec)
+    (trainer, HostRunResult) from HostAsyncTrainer.run_serial. DP specs
+    resolve through the same calibration as run_federation, so the
+    memory-vs-TCP parity acceptance extends to defended runs."""
+    prob = build_problem(resolve_spec_dp(spec, rounds))
     tr = HostAsyncTrainer(prob.model, prob.vfl, prob.X, prob.y,
                           batch_size=prob.batch_size, compute_cost_s=0.0,
                           seed=prob.seed, channel=channel)

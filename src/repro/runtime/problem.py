@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import VFLConfig
+from repro.configs.base import DPConfig, VFLConfig
 from repro.configs.paper_models import PaperFCNConfig, PaperLRConfig
 from repro.core.vfl import PaperFCNModel, PaperLRModel, pad_features
 
@@ -33,14 +33,31 @@ class Problem:
 
 def build_problem(spec: dict) -> Problem:
     """spec = {kind: 'lr'|'fcn', parties, features, samples, batch, seed,
-    vfl: {mu, lr_party, codec, num_directions, ...}}."""
+    vfl: {mu, lr_party, codec, num_directions, dp, ...}}.
+
+    ``vfl.dp`` (a dict of DPConfig fields, JSON-able like the rest of
+    the spec) must arrive with its noise_multiplier already resolved —
+    the HARNESS calibrates it once (repro.dp.accountant.resolve_spec_dp,
+    which knows the round budget) so every OS process rebuilds the SAME
+    defended exchange; an unresolved target fails loudly here instead of
+    letting processes calibrate divergently."""
     kind = spec.get("kind", "lr")
     q = int(spec.get("parties", 2))
     d = int(spec.get("features", 16))
     n = int(spec.get("samples", 128))
     seed = int(spec.get("seed", 0))
     batch = int(spec.get("batch", 8))
-    vfl = VFLConfig(num_parties=q, **spec.get("vfl", {}))
+    vfl_kw = dict(spec.get("vfl", {}))
+    dp = vfl_kw.pop("dp", None)
+    if isinstance(dp, dict):
+        dp = DPConfig(**dp)
+    if dp is not None and not dp.resolved:
+        raise ValueError(
+            "spec carries a DP target epsilon without a resolved "
+            "noise_multiplier; route the spec through "
+            "repro.dp.accountant.resolve_spec_dp(spec, rounds) (the "
+            "federation harness does) before building the problem")
+    vfl = VFLConfig(num_parties=q, dp=dp, **vfl_kw)
     key = jax.random.key(seed)
     if kind == "lr":
         model = PaperLRModel(PaperLRConfig(num_features=d, num_parties=q))

@@ -14,7 +14,11 @@ accounting are shared with the simulated paths by construction:
                       parties 0..m-1's round g. This is the reference
                       order — bit-identical to HostAsyncTrainer.run_serial.
   schedule='arrival'  complete rounds are processed in socket-arrival
-                      order (AsyREVEL: nobody waits for a straggler).
+                      order (AsyREVEL: nobody waits for a straggler),
+                      optionally bounded by ``cfg.max_staleness`` — the
+                      paper's tau (Assumption 4) ENFORCED: rounds racing
+                      more than tau ahead of the slowest party park
+                      until it catches up.
 
 Fault tolerance: a disconnect (EOF without a goodbye) triggers a
 membership-change checkpoint of the server state (w0 + c_table + update
@@ -115,6 +119,11 @@ class RuntimeServer:
         self._errors: list[BaseException] = []
         self._bye = [False] * self.q
         self._disconnects = 0
+        # Assumption-4 enforcement bookkeeping (arrival schedule):
+        # rounds parked for racing > max_staleness ahead, and the max
+        # staleness actually admitted to processing
+        self._parked_events = 0
+        self._staleness_max = 0
         self._dead_bytes_in = 0
         self._dead_bytes_out = 0
         self._listener: FramedSocket | None = None
@@ -361,12 +370,33 @@ class RuntimeServer:
                 self._process(m, msg_c, hats)
 
     def _dispatch_arrival(self) -> None:
+        """Arrival order, bounded by the paper's tau (Assumption 4) when
+        ``cfg.max_staleness`` is set: a round that would race more than
+        tau rounds ahead of the SLOWEST party is parked and re-admitted
+        once the laggard catches up. The slowest party's own round has
+        staleness 0, so it is always admissible — parking can stall the
+        fast parties but never the whole dispatcher (a laggard that
+        never delivers is a deadline failure, as before)."""
         total = self.rounds * self.q
+        tau = self.cfg.max_staleness
+        parked: dict[int, tuple] = {}          # party -> (seq, rnd, c, hats)
+
+        def staleness(rnd: int) -> int:
+            return rnd - min(self._processed)
+
         while sum(self._processed) < total:
-            m, seq, rnd, msg_c, hats = self._pop(self._global_inbox)
+            item = None
+            # oldest parked round first: FIFO among the admissible ones
+            for pm in sorted(parked, key=lambda p: parked[p][1]):
+                if staleness(parked[pm][1]) <= tau:
+                    item = (pm,) + parked.pop(pm)
+                    break
+            if item is None:
+                item = self._pop(self._global_inbox)
+            m, seq, rnd, msg_c, hats = item
             link = self._current_link(m)
             if link is not None and seq < link.seq:
-                continue
+                continue             # stale pre-crash link: will be resent
             if rnd < self._processed[m]:
                 self._resend_cached(m, rnd)
                 continue
@@ -374,6 +404,11 @@ class RuntimeServer:
                 raise FederationError(
                     f"party {m} skipped ahead: sent round {rnd}, "
                     f"expected {self._processed[m]}")
+            if tau is not None and staleness(rnd) > tau:
+                parked[m] = (seq, rnd, msg_c, hats)
+                self._parked_events += 1
+                continue
+            self._staleness_max = max(self._staleness_max, staleness(rnd))
             self._process(m, msg_c, hats)
 
     # -- run ---------------------------------------------------------------
@@ -430,6 +465,8 @@ class RuntimeServer:
             "transcript_len": (len(transcript) if transcript is not None
                                else None),
             "disconnects": self._disconnects,
+            "parked": self._parked_events,
+            "staleness_max": self._staleness_max,
             "processed": list(self._processed),
             "w0": {k: np.asarray(v) for k, v in self.core.w0.items()},
             "socket_bytes_in": self._dead_bytes_in + sum(

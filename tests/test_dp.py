@@ -1,0 +1,311 @@
+"""The DP defense subsystem (src/repro/dp, docs/dp.md): mechanism
+determinism across codecs and transports, accountant round-trips, the
+eps=inf transparency guarantee, K>1 release independence, attack
+degradation on defended transcripts, and launcher flag coherence.
+
+The multi-process memory-vs-TCP parity check is marked ``runtime`` (and
+``slow``) like the rest of the federation tests; everything else is
+fast and marked ``dp``.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DPConfig, PaperLRConfig, VFLConfig
+from repro.core import privacy
+from repro.core.async_host import HostAsyncTrainer
+from repro.core.exchange import ZOExchange, wire_nbytes
+from repro.core.vfl import PaperLRModel, pad_features
+from repro.core.wire import RecordingChannel
+from repro.data.synthetic import make_classification
+from repro.dp import (DPExchange, account, calibrate, defend_payload,
+                      resolve_dp, resolve_spec_dp)
+
+dp_mark = pytest.mark.dp
+runtime = pytest.mark.runtime
+slow = pytest.mark.slow
+
+DELTA = 1e-5
+
+
+def _dp(eps=10.0, rounds=8, **kw):
+    return resolve_dp(DPConfig(epsilon=eps, delta=DELTA, clip=1.0, **kw),
+                      rounds=rounds)
+
+
+def _problem(q=2, d=16, n=64):
+    X, y = make_classification(n, d, seed=3)
+    model = PaperLRModel(PaperLRConfig(num_features=d, num_parties=q))
+    return model, np.asarray(pad_features(jnp.asarray(X), d, q)), \
+        np.asarray(y)
+
+
+def _vfl(dp=None, q=2, **kw):
+    kw.setdefault("mu", 5e-2)
+    kw.setdefault("lr_party", 1e-2)
+    kw.setdefault("lr_server", 1e-3)
+    return VFLConfig(num_parties=q, dp=dp, **kw)
+
+
+def _serial(model, vfl, Xp, y, rounds=3, seed=0, channel=None,
+            batch_size=8):
+    tr = HostAsyncTrainer(model, vfl, Xp, y, batch_size=batch_size,
+                          compute_cost_s=0.0, seed=seed, channel=channel)
+    return tr, tr.run_serial(rounds)
+
+
+# ------------------------------------------------------------- mechanisms --
+
+@dp_mark
+def test_config_rejects_incoherent_combos():
+    with pytest.raises(ValueError):
+        DPConfig(epsilon=5.0)                   # epsilon without clip
+    with pytest.raises(ValueError):
+        DPConfig(noise_multiplier=1.0)          # noise without clip
+    with pytest.raises(ValueError):
+        DPConfig(epsilon=-1.0, clip=1.0)
+    with pytest.raises(ValueError):
+        DPConfig(epsilon=5.0, clip=1.0, mechanism="exponential")
+    with pytest.raises(ValueError):
+        DPConfig(epsilon=5.0, clip=1.0, delta=0.0)
+    # eps=inf needs no clip: the subsystem is OFF
+    assert not DPConfig(epsilon=float("inf")).enabled
+
+
+@dp_mark
+def test_unresolved_target_fails_loudly_at_the_exchange():
+    with pytest.raises(ValueError, match="resolve_dp"):
+        ZOExchange.from_config(_vfl(DPConfig(epsilon=5.0, clip=1.0)))
+
+
+@dp_mark
+def test_noised_payload_bit_identical_across_codecs_and_calls():
+    """Same key => same defended values, independent of the codec (the
+    noise lands BEFORE quantization, keyed off the round key alone)."""
+    dp = _dp()
+    c = jnp.asarray(np.linspace(-3, 3, 16), jnp.float32)
+    key = jax.random.key(7)
+    ref = None
+    for codec in ("f32", "bf16", "int8"):
+        ex = ZOExchange.from_config(_vfl(dp, codec=codec))
+        d1 = np.asarray(ex.defend(c, key))
+        d2 = np.asarray(ex.defend(c, key))
+        np.testing.assert_array_equal(d1, d2)
+        if ref is None:
+            ref = d1
+        np.testing.assert_array_equal(d1, ref)
+    # and f32 encode_up ships exactly the defended values
+    ex = ZOExchange.from_config(_vfl(dp, codec="f32"))
+    np.testing.assert_array_equal(np.asarray(ex.encode_up(c, key)), ref)
+
+
+@dp_mark
+def test_clip_applies_before_noise_and_sigma_zero_is_clip_only():
+    dp = DPConfig(noise_multiplier=0.0, clip=0.5)
+    c = jnp.asarray([-3.0, -0.25, 0.25, 3.0], jnp.float32)
+    out = np.asarray(defend_payload(c, jax.random.key(0), dp))
+    np.testing.assert_array_equal(out, [-0.5, -0.25, 0.25, 0.5])
+
+
+@dp_mark
+@pytest.mark.parametrize("mechanism", ["gaussian", "laplace"])
+def test_noise_scale_tracks_sigma_times_clip(mechanism):
+    dp = DPConfig(noise_multiplier=2.0, clip=0.5, mechanism=mechanism)
+    c = jnp.zeros((4096,), jnp.float32)
+    out = np.asarray(defend_payload(c, jax.random.key(1), dp))
+    # std: gaussian = sigma*clip = 1.0; laplace = sqrt(2)*b = sqrt(2)
+    expect = 1.0 if mechanism == "gaussian" else math.sqrt(2.0)
+    assert abs(np.std(out) - expect) < 0.1
+    assert abs(np.mean(out)) < 0.1
+
+
+@dp_mark
+def test_releases_draw_independent_noise_per_upload_and_direction():
+    """The (1+K) uploads of one K>1 round must carry pairwise-different
+    noise realizations (shared noise would correlate the releases AND
+    break the K-direction variance reduction)."""
+    model, Xp, y = _problem()
+    dp = _dp(rounds=3)
+    vfl = _vfl(dp, num_directions=2)
+    rec = RecordingChannel()
+    _serial(model, vfl, Xp, y, rounds=1, channel=rec)
+    msgs = [m for m in rec.transcript if m.kind in ("c_up", "c_hat_up")
+            and m.sender == "party:0"]
+    assert len(msgs) == 3                        # c + 2 c_hats, round 0
+    payloads = [np.asarray(m.payload) for m in msgs]
+    for i in range(len(payloads)):
+        for j in range(i + 1, len(payloads)):
+            assert not np.array_equal(payloads[i], payloads[j])
+    # wire accounting is unchanged by the defense (same shapes/codec)
+    assert all(m.nbytes == wire_nbytes(m.payload) for m in msgs)
+
+
+@dp_mark
+def test_dpexchange_wrapper_requires_enabled_config():
+    with pytest.raises(ValueError):
+        DPExchange(None, mu=1e-3)
+    with pytest.raises(ValueError):
+        DPExchange(DPConfig(epsilon=float("inf")), mu=1e-3)
+    base = ZOExchange(mu=1e-3, codec="int8")
+    ex = DPExchange.wrap(base, _dp())
+    assert ex.codec.name == "int8" and ex.dp is not None
+
+
+# ----------------------------------------------------------- transparency --
+
+@dp_mark
+def test_eps_inf_run_bit_identical_to_undefended():
+    """DPConfig(epsilon=inf) goes through the DP gating and must be the
+    undefended code path byte-for-byte — history AND params."""
+    model, Xp, y = _problem()
+    tr0, res0 = _serial(model, _vfl(None), Xp, y)
+    tr1, res1 = _serial(model, _vfl(DPConfig(epsilon=float("inf"),
+                                             clip=1.0)), Xp, y)
+    assert [h for _, h in res0.history] == [h for _, h in res1.history]
+    for m in range(2):
+        np.testing.assert_array_equal(np.asarray(tr0.party_w[m]["w"]),
+                                      np.asarray(tr1.party_w[m]["w"]))
+
+
+@dp_mark
+def test_defended_run_is_seed_deterministic_and_differs_from_undefended():
+    model, Xp, y = _problem()
+    dp = _dp(rounds=3)
+    _, a = _serial(model, _vfl(dp), Xp, y)
+    _, b = _serial(model, _vfl(dp), Xp, y)
+    _, clean = _serial(model, _vfl(None), Xp, y)
+    assert [h for _, h in a.history] == [h for _, h in b.history]
+    assert [h for _, h in a.history] != [h for _, h in clean.history]
+
+
+# ------------------------------------------------------------- accountant --
+
+@dp_mark
+@pytest.mark.parametrize("mechanism", ["gaussian", "laplace"])
+@pytest.mark.parametrize("eps", [0.5, 2.0, 8.0])
+def test_accountant_calibrate_account_roundtrip(mechanism, eps):
+    sigma = calibrate(eps, DELTA, rounds=24, num_directions=1,
+                      mechanism=mechanism)
+    back = account(sigma, 24, DELTA, mechanism=mechanism)
+    assert back <= eps + 1e-6
+    assert back >= 0.9 * eps                      # bisection is tight
+
+
+@dp_mark
+def test_accountant_monotone_in_sigma_rounds_and_directions():
+    assert account(2.0, 24, DELTA) > account(4.0, 24, DELTA)
+    assert account(2.0, 48, DELTA) > account(2.0, 24, DELTA)
+    assert account(2.0, 24, DELTA, num_directions=3) > \
+        account(2.0, 24, DELTA, num_directions=1)
+    # sequential (colluding-release worst case) >= per-party parallel
+    assert account(2.0, 24, DELTA, parties=4, composition="sequential") > \
+        account(2.0, 24, DELTA, parties=4, composition="parallel")
+
+
+@dp_mark
+def test_resolve_dp_is_idempotent_and_spec_resolution_matches():
+    dp = DPConfig(epsilon=4.0, delta=DELTA, clip=1.0)
+    r1 = resolve_dp(dp, rounds=10)
+    assert r1.noise_multiplier is not None
+    assert resolve_dp(r1, rounds=10) == r1        # same budget: kept
+    with pytest.raises(ValueError, match="recalibrate"):
+        resolve_dp(r1, rounds=99)     # longer run: sigma under-delivers
+    assert resolve_dp(None, rounds=10) is None
+    with pytest.raises(ValueError):   # clip-only cannot claim finite eps
+        DPConfig(epsilon=4.0, clip=1.0, noise_multiplier=0.0)
+    spec = {"kind": "lr", "parties": 2,
+            "vfl": {"dp": {"epsilon": 4.0, "delta": DELTA, "clip": 1.0}}}
+    out = resolve_spec_dp(spec, rounds=10)
+    assert out["vfl"]["dp"]["noise_multiplier"] == \
+        pytest.approx(r1.noise_multiplier)
+    assert "dp" in spec["vfl"] and \
+        spec["vfl"]["dp"].get("noise_multiplier") is None   # not mutated
+
+
+@dp_mark
+def test_unresolved_spec_rejected_by_build_problem():
+    from repro.runtime.problem import build_problem
+    spec = {"kind": "lr", "parties": 2,
+            "vfl": {"dp": {"epsilon": 4.0, "delta": DELTA, "clip": 1.0}}}
+    with pytest.raises(ValueError, match="resolve_spec_dp"):
+        build_problem(spec)
+
+
+# ------------------------------------------------- defended transcripts ----
+
+@dp_mark
+@slow
+def test_upload_label_inference_degrades_on_defended_transcript():
+    """The seam-reading attack reads labels off an undefended trained
+    run's up-link but collapses toward chance on a heavily-defended
+    one; the exposure columns (message KINDS) are unchanged — DP hides
+    values, not structure."""
+    model, Xp, y = _problem(q=4, d=32, n=256)
+    rec0 = RecordingChannel()
+    _serial(model, _vfl(None, q=4, lr_party=5e-2, lr_server=1.25e-2),
+            Xp, y, rounds=30, channel=rec0, batch_size=32)
+    li0 = privacy.label_inference_from_uploads(rec0.transcript, y)
+    dp = _dp(eps=10.0, rounds=30)
+    rec1 = RecordingChannel()
+    _serial(model, _vfl(dp, q=4, lr_party=5e-2, lr_server=1.25e-2),
+            Xp, y, rounds=30, channel=rec1, batch_size=32)
+    li1 = privacy.label_inference_from_uploads(rec1.transcript, y)
+    assert li0["accuracy"] > 0.65                 # the leak is real
+    assert li1["accuracy"] < li0["accuracy"] - 0.1
+    assert abs(li1["accuracy"] - 0.5) < 0.08      # ~chance when defended
+    assert privacy.exposure_from_transcript(rec1.transcript) == \
+        privacy.exposure_from_transcript(rec0.transcript)
+
+
+# -------------------------------------------------------- launcher flags ---
+
+@dp_mark
+def test_train_flags_reject_incoherent_dp_combos():
+    from repro.launch.train import parse_args
+    base = ["--arch", "qwen1.5-0.5b", "--reduced", "--mode", "vfl-zoo"]
+    with pytest.raises(SystemExit):               # DP outside vfl-zoo
+        parse_args(["--arch", "qwen1.5-0.5b", "--mode", "lm",
+                    "--dp-epsilon", "8", "--dp-clip", "1.0"])
+    with pytest.raises(SystemExit):               # epsilon without clip
+        parse_args(base + ["--dp-epsilon", "8"])
+    with pytest.raises(SystemExit):               # clip without epsilon
+        parse_args(base + ["--dp-clip", "1.0"])
+    with pytest.raises(SystemExit):               # delta without epsilon
+        parse_args(base + ["--dp-delta", "1e-5"])
+    with pytest.raises(SystemExit):               # nonpositive epsilon
+        parse_args(base + ["--dp-epsilon", "0", "--dp-clip", "1.0"])
+    ok = parse_args(base + ["--dp-epsilon", "8", "--dp-clip", "1.0"])
+    assert ok.dp_epsilon == 8.0 and ok.dp_delta == 1e-5
+    inf = parse_args(base + ["--dp-epsilon", "inf"])   # off-switch: no clip
+    assert math.isinf(inf.dp_epsilon)
+
+
+# ------------------------------------------------------ transport parity ---
+
+@runtime
+@slow
+@dp_mark
+def test_defended_tcp_run_bit_identical_to_memory_reference():
+    """The runtime's bit-parity acceptance extended to DP: same seed,
+    same DP target => the noised federation over real OS processes/TCP
+    reproduces the in-memory defended reference exactly (losses AND
+    final params), because the resolved noise multiplier rides the spec
+    and the noise keys derive from the shared round keys."""
+    from repro.configs.base import RuntimeConfig
+    from repro.runtime import (history_losses, run_federation,
+                               run_reference)
+    spec = {"kind": "lr", "parties": 2, "features": 16, "samples": 64,
+            "batch": 8, "seed": 0,
+            "vfl": {"mu": 5e-2, "lr_party": 1e-2, "lr_server": 1e-3,
+                    "dp": {"epsilon": 10.0, "delta": DELTA, "clip": 1.0}}}
+    res = run_federation(spec, 4, cfg=RuntimeConfig(deadline_s=120.0))
+    tr, ref = run_reference(spec, 4)
+    np.testing.assert_array_equal(
+        history_losses(res), np.asarray([h for _, h in ref.history]))
+    for m in range(2):
+        np.testing.assert_array_equal(
+            res["parties"][m]["final_w"]["w"],
+            np.asarray(tr.party_w[m]["w"]))

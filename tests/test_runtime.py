@@ -265,6 +265,27 @@ def test_resume_rewinds_party_when_server_snapshot_lags(tmp_path):
 
 @runtime
 @slow
+def test_arrival_schedule_enforces_tau_staleness_bound():
+    """Assumption 4 ENFORCED: with a slow-link straggler the fast party
+    would race arbitrarily far ahead under plain arrival dispatch;
+    ``max_staleness=1`` parks its rounds until the laggard catches up.
+    The server reports both the parking events (proof the bound engaged)
+    and the maximum staleness actually admitted (never above tau)."""
+    spec, rounds = _spec(), 5
+    plan = FailurePlan({1: PartyFault(slow_send_s=0.25)})
+    res = run_federation(spec, rounds, plan=plan,
+                         cfg=_cfg(schedule="arrival", max_staleness=1))
+    srv = res["server"]
+    assert srv["parked"] > 0                  # the fast party got parked
+    assert srv["staleness_max"] <= 1          # tau held for every round
+    assert srv["processed"] == [rounds, rounds]
+    assert srv["updates"] == 2 * rounds
+    h = history_losses(res)
+    assert len(h) == 2 * rounds and np.isfinite(h).all()
+
+
+@runtime
+@slow
 def test_arrival_schedule_tolerates_crash_and_straggler():
     """AsyREVEL's async dispatch on the real transport: a crash+rejoin
     and a slow-link straggler; every party still completes its budget
