@@ -198,12 +198,25 @@ class DPConfig:
     clip: Optional[float] = None        # REQUIRED when enabled: |c_i| <= clip
     mechanism: str = "gaussian"         # gaussian (RDP) | laplace (pure-DP)
     noise_multiplier: Optional[float] = None   # sigma; noise std = sigma*clip
+    sample_rate: Optional[float] = None  # Poisson-subsampling rate q of the
+    #                                      minibatch draw; opt-in: None means
+    #                                      account WITHOUT amplification (the
+    #                                      pre-existing, conservative curve)
 
     def __post_init__(self):
         if self.mechanism not in ("gaussian", "laplace"):
             raise ValueError(
                 f"unknown DP mechanism {self.mechanism!r}; "
                 f"have gaussian, laplace")
+        if self.sample_rate is not None:
+            if not 0.0 < self.sample_rate <= 1.0:
+                raise ValueError(
+                    f"sample_rate must be in (0, 1], got {self.sample_rate}")
+            if self.mechanism != "gaussian":
+                raise ValueError(
+                    "subsampled amplification is only implemented for the "
+                    "gaussian mechanism (MTZ19-style RDP bound); drop "
+                    "sample_rate or use mechanism='gaussian'")
         if self.epsilon is not None and self.epsilon <= 0:
             raise ValueError(f"epsilon must be > 0, got {self.epsilon}")
         if not 0.0 < self.delta < 1.0:
@@ -260,6 +273,9 @@ class VFLConfig:
     #                               (core/exchange.py: f32 | bf16 | int8)
     dp: Optional[DPConfig] = None  # clip-then-noise defense at the codec
     #                               seam (src/repro/dp; None = undefended)
+    fused: bool = False           # route releases through the fused
+    #                               kernels/fused_round fast path (bitwise
+    #                               equal to the unfused seam; --fused)
 
 
 @dataclass(frozen=True)

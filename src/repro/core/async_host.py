@@ -48,8 +48,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import VFLConfig
-from repro.core.exchange import CommsMeter, ZOExchange
+from repro.core.exchange import CommsMeter, ZOExchange, wire_nbytes
 from repro.core.vfl import VFLModel
+from repro.kernels import fused_round
 from repro.core.wire import (SERVER, Channel, InMemoryChannel, Message,
                              party, party_index)
 from repro.utils.prng import fold_name
@@ -144,6 +145,41 @@ def _party_fused_k_jit(model, vfl, w_m, x_m, key, m):
     return c, c_hats, model.regularizer(w_m), regs, us, keys
 
 
+@functools.partial(jax.jit, static_argnames=("model", "vfl", "ex", "m"))
+def _party_release_jit(model, vfl, ex, w_m, x_m, key, z, m):
+    """The whole fused party round in ONE dispatch: perturb + both local
+    evals + the defended encode (clip -> dp noise -> codec) of both
+    up-link payloads. The baseline f32 exchange encodes for free (its
+    codec is a passthrough), so folding the defended encodes into the
+    party dispatch is what puts the defended round at dispatch parity
+    with the plain protocol. Key discipline and bits are EXACTLY the
+    two-call path below (the z runtime-zero guards in kernels/fused_round
+    hold in this larger co-optimized graph too — pinned at run level in
+    tests/test_kernels.py)."""
+    c, c_hat, reg0, reg1, u = _party_fused_jit(model, vfl, w_m, x_m, key, m)
+    wire_c = fused_round._encode_up_jit(
+        ex, c, jax.random.fold_in(key, 1), z, "xla", True)
+    wire_c_hat = fused_round._encode_up_jit(
+        ex, c_hat, jax.random.fold_in(key, 2), z, "xla", True)
+    return wire_c, wire_c_hat, reg0, reg1, u
+
+
+@functools.partial(jax.jit, static_argnames=("model", "vfl", "ex", "m"))
+def _party_release_k_jit(model, vfl, ex, w_m, x_m, key, z, m):
+    """K-direction twin of _party_release_jit: one dispatch yields the
+    base wire plus one independently-keyed wire per direction (same
+    fold_name(k_dir, 'codec_hat') schedule as the unfused path)."""
+    c, c_hats, reg0, regs_k, us, keys = _party_fused_k_jit(
+        model, vfl, w_m, x_m, key, m)
+    wire_c = fused_round._encode_up_jit(
+        ex, c, jax.random.fold_in(key, 1), z, "xla", True)
+    wire_hats = tuple(
+        fused_round._encode_up_jit(
+            ex, c_hats[k], fold_name(keys[k], "codec_hat"), z, "xla", True)
+        for k in range(vfl.num_directions))
+    return wire_c, wire_hats, reg0, regs_k, us
+
+
 @functools.partial(jax.jit, static_argnames=("vfl",))
 def _party_apply_jit(vfl, w_m, u, coeff):
     return ZOExchange.from_config(vfl).apply_direction(
@@ -210,10 +246,21 @@ def party_round_prepare(model, vfl: VFLConfig, ex: ZOExchange, w_m, X,
     if vfl.num_directions == 1:
         with _JAX_LOCK:
             x_m = model.slice_features(jnp.asarray(X[idx]), m)
-            c, c_hat, reg0, reg1, u = _party_fused_jit(
-                model, vfl, w_m, x_m, key, m)
-            wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
-            wire_c_hat = ex.encode_up(c_hat, jax.random.fold_in(key, 2))
+            if ex.fused:
+                # single dispatch for compute AND both defended encodes
+                # (the exchange rides as a static arg — it hashes by
+                # semantics and the traced code never touches its meter)
+                wire_c, wire_c_hat, reg0, reg1, u = _party_release_jit(
+                    model, vfl, ex, w_m, x_m, key,
+                    fused_round.runtime_zero(), m)
+                if ex.meter is not None:
+                    ex.meter.add_up(wire_nbytes(wire_c))
+                    ex.meter.add_up(wire_nbytes(wire_c_hat))
+            else:
+                c, c_hat, reg0, reg1, u = _party_fused_jit(
+                    model, vfl, w_m, x_m, key, m)
+                wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
+                wire_c_hat = ex.encode_up(c_hat, jax.random.fold_in(key, 2))
             wire_c = jax.tree.map(np.asarray, wire_c)
             wire_hats = [jax.tree.map(np.asarray, wire_c_hat)]
             regs = [float(reg1)]
@@ -221,17 +268,29 @@ def party_round_prepare(model, vfl: VFLConfig, ex: ZOExchange, w_m, X,
     else:
         with _JAX_LOCK:
             x_m = model.slice_features(jnp.asarray(X[idx]), m)
-            c, c_hats, reg0, regs_k, us, keys = _party_fused_k_jit(
-                model, vfl, w_m, x_m, key, m)
-            wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
-            wire_c = jax.tree.map(np.asarray, wire_c)
-            # each direction's upload is its OWN message with its own
-            # rounding key (fold_name(k_dir, 'codec_hat'), matching
-            # the device-scan path's per-direction independence)
-            wire_hats = [
-                jax.tree.map(np.asarray, ex.encode_up(
-                    c_hats[k], fold_name(keys[k], "codec_hat")))
-                for k in range(vfl.num_directions)]
+            if ex.fused:
+                wire_c, wire_hats_j, reg0, regs_k, us = _party_release_k_jit(
+                    model, vfl, ex, w_m, x_m, key,
+                    fused_round.runtime_zero(), m)
+                if ex.meter is not None:
+                    ex.meter.add_up(wire_nbytes(wire_c))
+                    for w in wire_hats_j:
+                        ex.meter.add_up(wire_nbytes(w))
+                wire_c = jax.tree.map(np.asarray, wire_c)
+                wire_hats = [jax.tree.map(np.asarray, w)
+                             for w in wire_hats_j]
+            else:
+                c, c_hats, reg0, regs_k, us, keys = _party_fused_k_jit(
+                    model, vfl, w_m, x_m, key, m)
+                wire_c = ex.encode_up(c, jax.random.fold_in(key, 1))
+                wire_c = jax.tree.map(np.asarray, wire_c)
+                # each direction's upload is its OWN message with its own
+                # rounding key (fold_name(k_dir, 'codec_hat'), matching
+                # the device-scan path's per-direction independence)
+                wire_hats = [
+                    jax.tree.map(np.asarray, ex.encode_up(
+                        c_hats[k], fold_name(keys[k], "codec_hat")))
+                    for k in range(vfl.num_directions)]
             regs = [float(r) for r in np.asarray(regs_k)]
     return PartyRoundPrep(wire_c, wire_hats, float(reg0), regs, us)
 
@@ -400,11 +459,15 @@ class HostAsyncTrainer:
         with _JAX_LOCK:
             cs = jnp.asarray(self.server.c_table[idx])
             y = self.server.y[idx]
+            ex, z = self.exchange, fused_round.runtime_zero()
             for m in range(q):
                 x_m = self.model.slice_features(jnp.asarray(self.X[idx]), m)
                 if vfl.num_directions == 1:
                     c, c_hat, _, _, u = _party_fused_jit(
                         self.model, vfl, self.party_w[m], x_m, key, m)
+                    if ex.fused:
+                        _party_release_jit(self.model, vfl, ex,
+                                           self.party_w[m], x_m, key, z, m)
                     if m == 0:  # party blocks share structure/shapes
                         _serve_jit(self.model, vfl, self.server.w0, cs,
                                    cs.at[:, m].set(c_hat), y, key)
@@ -412,6 +475,9 @@ class HostAsyncTrainer:
                 else:
                     c, c_hats, _, regs, us, _ = _party_fused_k_jit(
                         self.model, vfl, self.party_w[m], x_m, key, m)
+                    if ex.fused:
+                        _party_release_k_jit(self.model, vfl, ex,
+                                             self.party_w[m], x_m, key, z, m)
                     if m == 0:
                         _serve_k_jit(self.model, vfl, self.server.w0, cs,
                                      c_hats, y, key, m)

@@ -268,7 +268,7 @@ class ShardFoldedExchange(ZOExchange):
         super().__init__(mu=base.mu, direction=base.direction,
                          lam=base.lam, num_directions=base.num_directions,
                          seed_replay=base.seed_replay, codec=base.codec,
-                         meter=None, dp=base.dp)
+                         meter=None, dp=base.dp, fused=base.fused)
         self.axis_name = axis_name
 
     def _codec_key(self, key):

@@ -59,15 +59,19 @@ import numpy as np
 from repro.configs.base import VFLConfig
 from repro.core import zoo
 from repro.core.comms import RoundComms
-from repro.kernels import ops as kernel_ops
+from repro.kernels import fused_round
 from repro.utils.prng import fold_name
 
 SCALAR_BYTES = 4          # every function value on the wire is one f32
 
 
 def wire_nbytes(wire) -> int:
-    """Measured payload size: total bytes of the encoded wire arrays."""
-    return int(sum(np.asarray(leaf).nbytes for leaf in jax.tree.leaves(wire)))
+    """Measured payload size: total bytes of the encoded wire arrays.
+    Reads ``.nbytes`` off the arrays themselves (jax and numpy both carry
+    it) so metering never forces a device->host copy on the hot path."""
+    return int(sum(
+        leaf.nbytes if hasattr(leaf, "nbytes") else np.asarray(leaf).nbytes
+        for leaf in jax.tree.leaves(wire)))
 
 
 # ----------------------------------------------------------------- codecs --
@@ -126,6 +130,14 @@ class BF16Codec(Codec):
         return int(np.prod(np.shape(c))) * 2
 
 
+@jax.jit
+def _int8_decode(q, scale):
+    # one dispatch for the server-side dequant; the int8->f32 convert is
+    # exact and the multiply has no fusion partner, so this is bitwise the
+    # eager two-op chain
+    return q.astype(jnp.float32) * scale
+
+
 class Int8StochasticCodec(Codec):
     """Per-tensor absmax scale + stochastic rounding to int8.
 
@@ -150,7 +162,14 @@ class Int8StochasticCodec(Codec):
 
     def decode(self, wire):
         q, scale = wire
-        return q.astype(jnp.float32) * scale
+        if isinstance(q, np.ndarray):
+            # host wires (threaded/TCP runtimes ship numpy): dequantize on
+            # the host — the int8->f32 convert is exact and numpy's f32
+            # multiply is the same IEEE-754 single-rounding op XLA emits,
+            # so this is bitwise the device path without the device_put /
+            # dispatch / sync round-trip per payload
+            return q.astype(np.float32) * np.float32(np.asarray(scale))
+        return _int8_decode(q, scale)
 
     def nbytes(self, c) -> int:
         return int(np.prod(np.shape(c))) + 4          # values + scale
@@ -202,7 +221,8 @@ class ZOExchange:
     def __init__(self, mu: float, direction: str = "gaussian",
                  lam: float = 0.0, num_directions: int = 1,
                  seed_replay: bool = False, codec="f32",
-                 meter: CommsMeter | None = None, dp=None):
+                 meter: CommsMeter | None = None, dp=None,
+                 fused: bool = False):
         self.mu = mu
         self.direction = direction
         self.lam = lam
@@ -210,6 +230,10 @@ class ZOExchange:
         self.seed_replay = seed_replay
         self.codec = get_codec(codec)
         self.meter = meter
+        # fused=True routes every release through the single-dispatch
+        # kernels/fused_round fast path; the unfused code below stays the
+        # bit-parity oracle (tests/test_kernels.py pins them equal).
+        self.fused = bool(fused)
         # a disabled DPConfig (eps=inf) normalizes to None so the
         # defended-off exchange IS the undefended one (same hash, same
         # code path — the eps=inf bit-identity claim by construction)
@@ -228,7 +252,8 @@ class ZOExchange:
                    num_directions=vfl.num_directions,
                    seed_replay=vfl.seed_replay,
                    codec=getattr(vfl, "codec", "f32"), meter=meter,
-                   dp=getattr(vfl, "dp", None))
+                   dp=getattr(vfl, "dp", None),
+                   fused=getattr(vfl, "fused", False))
 
     # ---- wire: party -> server (Algorithm 1 line 5) ----------------------
     def _codec_key(self, key):
@@ -255,14 +280,22 @@ class ZOExchange:
         inside, so callers pass the same key they pass encode_up."""
         if self.dp is None:
             return c
+        if self.fused:
+            return fused_round.defend_fused(self, c, key)
         from repro.dp.mechanisms import defend_payload
         return defend_payload(c, self._dp_key(key), self.dp)
 
     def encode_up(self, c, key=None):
         """Party side: function values -> wire payload (+ measured bytes).
         The DP defense (clip-then-noise, repro/dp) applies HERE, before
-        the codec — the one seam every executor's up-link crosses."""
-        wire = self.codec.encode(self.defend(c, key), self._codec_key(key))
+        the codec — the one seam every executor's up-link crosses. With
+        ``fused`` the whole clip -> noise -> encode chain runs as ONE
+        dispatch (kernels/fused_round), bit-identical to this path."""
+        if self.fused:
+            wire = fused_round.encode_up_fused(self, c, key)
+        else:
+            wire = self.codec.encode(self.defend(c, key),
+                                     self._codec_key(key))
         if self.meter is not None:
             self.meter.add_up(wire_nbytes(wire))
         return wire
@@ -274,6 +307,8 @@ class ZOExchange:
     def roundtrip_up(self, c, key=None):
         """What the server sees after the up-link (identity for f32 with
         dp off) — the jit-traced twin of encode_up + decode_up."""
+        if self.fused:
+            return fused_round.roundtrip_up_fused(self, c, key)
         return self.codec.roundtrip(self.defend(c, key),
                                     self._codec_key(key))
 
@@ -289,6 +324,8 @@ class ZOExchange:
     # ---- estimator math (Eqs. 14-15) -------------------------------------
     def perturb(self, w, key):
         """w + mu * u. Returns (perturbed_tree, u_tree)."""
+        if self.fused and self.direction == "rademacher":
+            return fused_round.perturb(w, key, self.mu)
         return zoo.perturb(w, key, self.mu, self.direction)
 
     def coefficient(self, f_plus, f_base):
@@ -319,6 +356,8 @@ class ZOExchange:
             # at the update site (fused-kernel path on TPU).
             w_p, _ = self.perturb(w_m, key)
             coeff = self.coefficient(f_of(w_p, key), f_base)
+            if self.fused and self.direction == "rademacher":
+                return fused_round.zo_gradient_from_seed(w_m, key, coeff)
             return zoo.zo_gradient_from_seed(key, w_m, self.direction, coeff)
         if K == 1:
             w_p, u = self.perturb(w_m, key)
@@ -343,28 +382,31 @@ class ZOExchange:
 
     def apply_direction(self, w, u, coeff, lr: float):
         """Dense update from a materialized direction: w - lr * coeff * u."""
+        if self.fused:
+            return fused_round.apply_direction_fused(w, u, coeff, lr)
         return jax.tree.map(
             lambda a, d: (a - lr * coeff * d).astype(a.dtype), w, u)
 
     def apply_from_seed(self, w, key, coeff, lr: float):
         """Seed-replay update: regenerate u from ``key``; never store it."""
+        if self.fused and self.direction == "rademacher":
+            return fused_round.zo_apply(
+                w, key, jnp.asarray(lr * coeff, jnp.float32))
         return zoo.apply_zo_update(w, key, self.direction, coeff, lr)
 
     def apply_fused(self, w, key, coeff, lr: float, *,
-                    interpret: bool = True):
-        """Fused kernels/zo_update path (Rademacher directions only): the
-        per-leaf sign bits regenerate from the same per-leaf keys
+                    impl: str = "pallas", interpret: bool = True):
+        """Fused kernels path (Rademacher directions only): the per-leaf
+        sign bits regenerate from the same per-leaf keys
         ``direction_tree`` uses, so this is bit-compatible with
-        apply_from_seed(direction='rademacher')."""
+        apply_from_seed(direction='rademacher'). ``impl='pallas'`` is the
+        TPU kernel (interpret-mode here); ``impl='xla'`` the one-dispatch
+        host chain."""
         assert self.direction == "rademacher", \
             "the fused kernel derives u from sign bits (Rademacher law)"
-        leaves, treedef = jax.tree.flatten(w)
-        keys = jax.random.split(key, len(leaves))
-        bits = jax.tree.unflatten(
-            treedef, [jax.random.bits(k, leaf.shape, jnp.uint32)
-                      for k, leaf in zip(keys, leaves)])
         scale = jnp.asarray(lr * coeff, jnp.float32)
-        return kernel_ops.zo_update(w, bits, scale, interpret=interpret)
+        return fused_round.zo_apply(w, key, scale, impl=impl,
+                                    interpret=interpret)
 
     # ---- server side (Algorithm 1 lines 9-11 / Eq. 17) -------------------
     def server_update(self, w0, key, f_base, f_of, lr: float):
@@ -389,7 +431,7 @@ class ZOExchange:
     # Instances hash by semantics so they can ride in jit static args.
     def _hash_key(self):
         return (self.mu, self.direction, self.lam, self.num_directions,
-                self.seed_replay, self.codec.name, self.dp)
+                self.seed_replay, self.codec.name, self.dp, self.fused)
 
     def __hash__(self):
         return hash(self._hash_key())

@@ -28,6 +28,14 @@ below is in units of the noise multiplier sigma):
             same composition/conversion (tighter than basic pure-DP
             composition N/sigma, which is also reported as a cap).
 
+Subsampling amplification (opt-in via ``DPConfig.sample_rate``): the
+minibatch draw is already random, and Poisson subsampling at rate q
+amplifies the per-release gaussian guarantee
+(``rdp_subsampled_gaussian``, MTZ19/WBK19 integer-alpha bound, capped by
+the unamplified curve). ``sample_rate=None`` keeps the pre-existing
+conservative accounting bit-for-bit, so previously calibrated sigmas and
+their pins are untouched.
+
 ``calibrate`` inverts ``account`` by bisection (eps is strictly
 decreasing in sigma); ``resolve_dp`` fills ``DPConfig.noise_multiplier``
 from the target epsilon once the round budget is known, and
@@ -64,6 +72,40 @@ def rdp_laplace(alpha: float, sigma: float) -> float:
     return np.logaddexp(a, b) / (alpha - 1.0)
 
 
+def rdp_subsampled_gaussian(alpha: float, sigma: float,
+                            sample_rate: float) -> float:
+    """Per-release RDP of the Poisson-subsampled Gaussian mechanism.
+
+    Privacy amplification by subsampling (Mironov-Talwar-Zhang 2019 /
+    Wang-Balle-Kasiviswanathan 2019): with each sample entering a release
+    independently with probability q, integer alpha >= 2 satisfies
+
+      RDP(alpha) = 1/(alpha-1) * log sum_{k=0}^{alpha}
+                   C(alpha,k) (1-q)^{alpha-k} q^k e^{k(k-1)/(2 sigma^2)}
+
+    evaluated in log-space (lgamma binomials + logaddexp). q=1 recovers
+    the unsubsampled alpha/(2 sigma^2) exactly; non-integer or alpha < 2
+    grid points return inf (the conversion just skips them). The result
+    is additionally capped by the unamplified curve — subsampling never
+    hurts, and the cap keeps the bound safe at any q."""
+    if sample_rate >= 1.0:
+        return rdp_gaussian(alpha, sigma)
+    base = rdp_gaussian(alpha, sigma)
+    if alpha < 2 or abs(alpha - round(alpha)) > 1e-9:
+        return math.inf
+    a = int(round(alpha))
+    log_q = math.log(sample_rate)
+    log_1mq = math.log1p(-sample_rate)
+    c = 1.0 / (2.0 * sigma * sigma)
+    terms = [
+        (math.lgamma(a + 1) - math.lgamma(k + 1) - math.lgamma(a - k + 1))
+        + (a - k) * log_1mq + k * log_q + k * (k - 1) * c
+        for k in range(a + 1)
+    ]
+    val = float(np.logaddexp.reduce(terms)) / (a - 1.0)
+    return min(val, base)
+
+
 _RDP = {"gaussian": rdp_gaussian, "laplace": rdp_laplace}
 
 
@@ -79,13 +121,29 @@ class RDPAccountant:
         self.alphas = tuple(float(a) for a in alphas)
         self._rdp = np.zeros(len(self.alphas))       # composed RDP curve
 
-    def step(self, sigma: float, releases: int = 1) -> "RDPAccountant":
-        """Charge ``releases`` applications at noise multiplier sigma."""
+    def step(self, sigma: float, releases: int = 1,
+             sample_rate: float = 1.0) -> "RDPAccountant":
+        """Charge ``releases`` applications at noise multiplier sigma.
+        ``sample_rate`` < 1 applies Poisson-subsampling amplification
+        (gaussian mechanism only)."""
         if sigma <= 0:
             raise ValueError("sigma must be > 0 to account (sigma=0 is "
                              "not differentially private)")
-        per = np.array([_RDP[self.mechanism](a, sigma)
-                        for a in self.alphas])
+        if sample_rate is None:
+            sample_rate = 1.0
+        if not 0.0 < sample_rate <= 1.0:
+            raise ValueError(
+                f"sample_rate must be in (0, 1], got {sample_rate}")
+        if sample_rate < 1.0:
+            if self.mechanism != "gaussian":
+                raise ValueError(
+                    "subsampled amplification is only implemented for the "
+                    "gaussian mechanism")
+            per = np.array([rdp_subsampled_gaussian(a, sigma, sample_rate)
+                            for a in self.alphas])
+        else:
+            per = np.array([_RDP[self.mechanism](a, sigma)
+                            for a in self.alphas])
         self._rdp = self._rdp + releases * per
         return self
 
@@ -104,36 +162,43 @@ def releases_per_party(rounds: int, num_directions: int = 1) -> int:
 def account(sigma: float, rounds: int, delta: float,
             num_directions: int = 1, parties: int = 1,
             mechanism: str = "gaussian",
-            composition: str = "parallel") -> float:
+            composition: str = "parallel",
+            sample_rate: float = 1.0) -> float:
     """(eps) spent by a T-round run at noise multiplier ``sigma``.
 
     ``composition='parallel'`` (default) returns the per-party epsilon —
     the actual guarantee for each disjoint vertical feature block;
     'sequential' charges all M parties' releases against one budget (a
-    colluding-release worst case that ignores disjointness)."""
+    colluding-release worst case that ignores disjointness).
+    ``sample_rate`` < 1 credits the Poisson minibatch draw (privacy
+    amplification by subsampling)."""
     n = releases_per_party(rounds, num_directions)
     if composition == "sequential":
         n *= int(parties)
     elif composition != "parallel":
         raise ValueError(f"unknown composition {composition!r}; "
                          f"have parallel, sequential")
-    return RDPAccountant(mechanism).step(sigma, n).epsilon(delta)
+    return RDPAccountant(mechanism).step(
+        sigma, n, sample_rate=sample_rate).epsilon(delta)
 
 
 def calibrate(epsilon: float, delta: float, rounds: int,
               num_directions: int = 1, parties: int = 1,
               mechanism: str = "gaussian",
               composition: str = "parallel",
-              sigma_bounds=(1e-3, 1e6), tol: float = 1e-4) -> float:
+              sigma_bounds=(1e-3, 1e6), tol: float = 1e-4,
+              sample_rate: float = 1.0) -> float:
     """The inverse: smallest noise multiplier whose accounted epsilon is
-    <= the target. Bisection on the strictly-decreasing eps(sigma)."""
+    <= the target. Bisection on the strictly-decreasing eps(sigma). With
+    ``sample_rate`` < 1 the amplified curve needs strictly LESS noise at
+    equal (eps, delta, T) — tests pin that monotonicity."""
     if not (epsilon > 0 and math.isfinite(epsilon)):
         raise ValueError(f"calibrate needs a finite positive epsilon, "
                          f"got {epsilon}")
 
     def eps_of(s):
         return account(s, rounds, delta, num_directions, parties,
-                       mechanism, composition)
+                       mechanism, composition, sample_rate)
 
     lo, hi = sigma_bounds
     if eps_of(hi) > epsilon:
@@ -161,10 +226,12 @@ def resolve_dp(dp: DPConfig | None, rounds: int,
     running with a vacuous guarantee."""
     if dp is None or not dp.enabled:
         return dp
+    q = dp.sample_rate if dp.sample_rate is not None else 1.0
     if dp.noise_multiplier is not None:
         if dp.epsilon is not None and math.isfinite(dp.epsilon):
             spent = account(dp.noise_multiplier, rounds, dp.delta,
-                            num_directions, parties, dp.mechanism)
+                            num_directions, parties, dp.mechanism,
+                            sample_rate=q)
             if spent > dp.epsilon * (1.0 + 1e-9) + 1e-9:
                 raise ValueError(
                     f"noise_multiplier={dp.noise_multiplier:.4g} spends "
@@ -173,7 +240,7 @@ def resolve_dp(dp: DPConfig | None, rounds: int,
                     f"recalibrate for this round budget")
         return dp
     sigma = calibrate(dp.epsilon, dp.delta, rounds, num_directions,
-                      parties, dp.mechanism)
+                      parties, dp.mechanism, sample_rate=q)
     return dataclasses.replace(dp, noise_multiplier=sigma)
 
 

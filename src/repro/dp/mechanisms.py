@@ -106,4 +106,4 @@ class DPExchange(ZOExchange):
         return cls(dp, mu=base.mu, direction=base.direction, lam=base.lam,
                    num_directions=base.num_directions,
                    seed_replay=base.seed_replay, codec=base.codec,
-                   meter=base.meter)
+                   meter=base.meter, fused=base.fused)

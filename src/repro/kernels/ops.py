@@ -37,20 +37,14 @@ def flash_attention(q, k, v, *, causal: bool = True, interpret: bool = True,
 
 
 def zo_update(params, bits_tree, scale, *, interpret: bool = True):
-    """Apply the fused seed-replay update leaf-wise over a pytree."""
+    """Apply the fused seed-replay update leaf-wise over a pytree.
+    Ragged leaf sizes are handled inside ``zo_update_pallas`` (pad to a
+    block multiple, slice the tail off)."""
     def one(w, bits):
-        flat = w.reshape(-1)
-        n = flat.shape[0]
-        pad = (-n) % 256
-        if pad:
-            flat = jnp.pad(flat, (0, pad))
-            bits = jnp.pad(bits.reshape(-1), (0, pad))
-        # the kernel grid needs block | padded length; padded is always a
-        # multiple of 256, so fall back to 256 when 1024 doesn't divide it
-        block = 1024 if flat.shape[0] % 1024 == 0 else 256
-        out = zo_update_pallas(flat, bits.reshape(-1).astype(jnp.uint32),
+        out = zo_update_pallas(w.reshape(-1),
+                               bits.reshape(-1).astype(jnp.uint32),
                                jnp.asarray(scale, jnp.float32),
-                               block=block, interpret=interpret)
-        return out[:n].reshape(w.shape)
+                               interpret=interpret)
+        return out.reshape(w.shape)
 
     return jax.tree.map(one, params, bits_tree)

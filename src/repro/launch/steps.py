@@ -29,9 +29,14 @@ class TrainState(NamedTuple):
     step: jnp.ndarray
 
 
-def make_train_state(model: Model, key) -> TrainState:
+def make_train_state(model: Model, key,
+                     state_dtype=jnp.float32) -> TrainState:
+    """``state_dtype=jnp.bfloat16`` stores the Adam moments quantized
+    (half the optimizer memory; f32 master arithmetic every step —
+    optim/optimizers.py)."""
     params = model.init(key)
-    return TrainState(params, adam_init(params), jnp.zeros((), jnp.int32))
+    return TrainState(params, adam_init(params, state_dtype),
+                      jnp.zeros((), jnp.int32))
 
 
 def make_train_step(model: Model, schedule=None, grad_clip: float = 1.0,

@@ -94,6 +94,17 @@ def parse_args(argv=None):
                    help="tcp only: scripted fault — crash party 0 at "
                         "this round and rejoin it from checkpoint")
     p.add_argument("--mu", type=float, default=1e-3)
+    p.add_argument("--fused", action="store_true",
+                   help="vfl-zoo only: route every release through the "
+                        "fused kernels/fused_round fast path (perturb + "
+                        "clip + DP noise + codec as single dispatches; "
+                        "bit-identical to the unfused seam — "
+                        "docs/kernels.md)")
+    p.add_argument("--opt-state-dtype", default="f32",
+                   choices=["f32", "bf16"],
+                   help="lm only: storage dtype of the Adam moments "
+                        "(bf16 halves optimizer memory; arithmetic stays "
+                        "f32 — optim/optimizers.py)")
     p.add_argument("--dp-epsilon", type=float, default=None,
                    help="vfl-zoo only: defend the party->server upload "
                         "seam with clip-then-noise DP calibrated to this "
@@ -152,6 +163,12 @@ def parse_args(argv=None):
         if args.dp_clip is not None or args.dp_delta is not None:
             p.error("--dp-clip/--dp-delta configure the DP mechanism; "
                     "they require --dp-epsilon")
+    if args.fused and args.mode != "vfl-zoo":
+        p.error("--fused fuses the vfl-zoo release hot path "
+                "(kernels/fused_round); --mode lm has no exchange seam")
+    if args.opt_state_dtype != "f32" and args.mode != "lm":
+        p.error("--opt-state-dtype quantizes the Adam moments of the "
+                "first-order lm trainer; vfl-zoo keeps no Adam state")
     if args.dp_delta is None:
         args.dp_delta = 1e-5
     return args
@@ -202,6 +219,8 @@ def run_tcp(args, cfg, log):
             "batch": args.batch_size, "seed": args.seed,
             "vfl": {"mu": args.mu, "lr_party": args.lr,
                     "lr_server": args.lr / args.parties}}
+    if args.fused:
+        spec["vfl"]["fused"] = True
     if args.dp_epsilon is not None:
         # the TARGET rides the spec; run_federation calibrates the noise
         # multiplier once and ships the resolved value to every process
@@ -250,7 +269,10 @@ def main(argv=None):
             "wsd" if args.arch.startswith("minicpm") else "cosine")
         sched = make_schedule(sched_name, args.lr, args.steps,
                               warmup=max(1, args.steps // 20))
-        state = step_lib.make_train_state(model, key)
+        state = step_lib.make_train_state(
+            model, key,
+            state_dtype=(jnp.bfloat16 if args.opt_state_dtype == "bf16"
+                         else jnp.float32))
         start_step = 0
         rng = np.random.default_rng(args.seed)
         if args.resume:
@@ -296,7 +318,7 @@ def main(argv=None):
     dp = make_dp(args)
     vfl = VFLConfig(num_parties=args.parties, mu=args.mu,
                     lr_party=args.lr, lr_server=args.lr / args.parties,
-                    dp=dp)
+                    dp=dp, fused=args.fused)
     if dp is not None:
         log.log(0, dp_epsilon=args.dp_epsilon,
                 dp_sigma=(dp.noise_multiplier

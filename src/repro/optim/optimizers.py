@@ -1,5 +1,16 @@
 """First-order optimizers in pure JAX (pytree-native). Adam keeps fp32
-moments regardless of param dtype (mixed-precision discipline)."""
+moments regardless of param dtype (mixed-precision discipline).
+
+Quantized optimizer state: ``adam_init(..., state_dtype=jnp.bfloat16)``
+(or ``make_optimizer('adam', state_dtype=...)``) stores the m/v moments
+in bf16 — halving optimizer memory traffic, the dominant per-step HBM
+cost once the fused round kernels stop materializing intermediates. The
+arithmetic stays in f32 master precision every step: moments are
+upcast, accumulated, used for the parameter update at full precision,
+and only then rounded back to the storage dtype. With the default f32
+storage the upcasts are no-ops, so existing trajectories are
+bit-identical (pinned in tests/test_optim.py).
+"""
 from __future__ import annotations
 
 import jax
@@ -10,10 +21,12 @@ from repro.utils.trees import global_norm
 
 def sgd_update(params, grads, lr, momentum_state=None, momentum=0.0):
     if momentum and momentum_state is not None:
+        # f32 master accumulation; store back in the state's own dtype
         momentum_state = jax.tree.map(
-            lambda m, g: momentum * m + g.astype(jnp.float32),
+            lambda m, g: (momentum * m.astype(jnp.float32)
+                          + g.astype(jnp.float32)).astype(m.dtype),
             momentum_state, grads)
-        upd = momentum_state
+        upd = jax.tree.map(lambda m: m.astype(jnp.float32), momentum_state)
     else:
         upd = grads
         momentum_state = momentum_state
@@ -23,8 +36,13 @@ def sgd_update(params, grads, lr, momentum_state=None, momentum=0.0):
     return params, momentum_state
 
 
-def adam_init(params):
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+def momentum_init(params, state_dtype=jnp.float32):
+    """Momentum buffer for sgd_update(momentum=...), optionally bf16."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+
+
+def adam_init(params, state_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)  # noqa: E731
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "t": jnp.zeros((), jnp.int32)}
@@ -37,11 +55,15 @@ def adam_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
         scale = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
         grads = jax.tree.map(lambda g: g * scale, grads)
     t = state["t"] + 1
-    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
-                     state["m"], grads)
-    v = jax.tree.map(lambda v_, g: b2 * v_
-                     + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-                     state["v"], grads)
+    # f32 masters for this step's arithmetic (no-op upcast for f32 state)
+    m = jax.tree.map(
+        lambda m_, g: b1 * m_.astype(jnp.float32)
+        + (1 - b1) * g.astype(jnp.float32),
+        state["m"], grads)
+    v = jax.tree.map(
+        lambda v_, g: b2 * v_.astype(jnp.float32)
+        + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
     bc1 = 1 - b1 ** t.astype(jnp.float32)
     bc2 = 1 - b2 ** t.astype(jnp.float32)
 
@@ -52,13 +74,17 @@ def adam_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
         return (p.astype(jnp.float32) - step).astype(p.dtype)
 
     params = jax.tree.map(upd, params, m, v)
-    return params, {"m": m, "v": v, "t": t}
+    store = lambda x32, old: x32.astype(old.dtype)  # noqa: E731
+    return params, {"m": jax.tree.map(store, m, state["m"]),
+                    "v": jax.tree.map(store, v, state["v"]),
+                    "t": t}
 
 
-def make_optimizer(name: str):
+def make_optimizer(name: str, state_dtype=jnp.float32):
     """Returns (init_fn, update_fn(params, grads, state, lr) -> (p, s))."""
     if name == "adam":
-        return adam_init, adam_update
+        init = lambda p: adam_init(p, state_dtype)  # noqa: E731
+        return init, adam_update
     if name == "sgd":
         return (lambda p: None), (
             lambda params, grads, state, lr: sgd_update(params, grads, lr))

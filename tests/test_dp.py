@@ -309,3 +309,51 @@ def test_defended_tcp_run_bit_identical_to_memory_reference():
         np.testing.assert_array_equal(
             res["parties"][m]["final_w"]["w"],
             np.asarray(tr.party_w[m]["w"]))
+
+
+# ------------------------------------------ subsampling amplification ------
+
+@dp_mark
+def test_subsampled_epsilon_monotone_in_sample_rate():
+    """Poisson amplification: smaller q spends strictly less budget, and
+    q=1 recovers the unamplified accountant EXACTLY."""
+    base = account(1.3, 64, DELTA)
+    prev = 0.0
+    for q in (0.05, 0.1, 0.3, 0.7, 1.0):
+        eps = account(1.3, 64, DELTA, sample_rate=q)
+        assert eps >= prev, f"eps not monotone at q={q}"
+        assert eps <= base + 1e-12
+        prev = eps
+    assert account(1.3, 64, DELTA, sample_rate=1.0) == base
+
+
+@dp_mark
+def test_subsampled_calibration_needs_strictly_less_noise():
+    full = calibrate(4.0, DELTA, rounds=64)
+    amp = calibrate(4.0, DELTA, rounds=64, sample_rate=0.1)
+    assert amp < full
+    # and the amplified sigma still meets the target under its own curve
+    assert account(amp, 64, DELTA, sample_rate=0.1) <= 4.0 + 1e-6
+
+
+@dp_mark
+def test_subsampling_rejects_laplace_and_bad_rates():
+    with pytest.raises(ValueError, match="sample_rate"):
+        DPConfig(epsilon=4.0, delta=DELTA, clip=1.0, sample_rate=1.5)
+    with pytest.raises(ValueError, match="gaussian"):
+        DPConfig(epsilon=4.0, delta=DELTA, clip=1.0, mechanism="laplace",
+                 sample_rate=0.5)
+    from repro.dp.accountant import RDPAccountant
+    with pytest.raises(ValueError, match="gaussian"):
+        RDPAccountant("laplace").step(1.3, sample_rate=0.5)
+
+
+@dp_mark
+def test_resolve_dp_threads_sample_rate():
+    """A config carrying sample_rate resolves to a strictly smaller
+    noise multiplier than the same budget without it."""
+    full = resolve_dp(DPConfig(epsilon=4.0, delta=DELTA, clip=1.0),
+                      rounds=32)
+    amp = resolve_dp(DPConfig(epsilon=4.0, delta=DELTA, clip=1.0,
+                              sample_rate=0.1), rounds=32)
+    assert amp.noise_multiplier < full.noise_multiplier

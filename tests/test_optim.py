@@ -67,3 +67,48 @@ def test_zo_sgd_seed_replay_deterministic():
     a, _ = zo_sgd_step(loss, w, jax.random.key(1), lr=0.1, mu=1e-3)
     b, _ = zo_sgd_step(loss, w, jax.random.key(1), lr=0.1, mu=1e-3)
     np.testing.assert_array_equal(np.asarray(a["x"]), np.asarray(b["x"]))
+
+
+# ------------------------------------------------ quantized adam state ----
+
+def _quad_trajectory(state_dtype, steps=60):
+    w = {"x": jnp.array([5.0, -3.0, 2.5])}
+    st = adam_init(w, state_dtype)
+    for _ in range(steps):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(w)
+        w, st = adam_update(w, g, st, 1e-1)
+    return w, st
+
+
+def test_bf16_state_tracks_f32_trajectory():
+    """bf16-stored moments with f32 master arithmetic stay close to the
+    full-precision trajectory on a quadratic."""
+    w32, _ = _quad_trajectory(jnp.float32)
+    w16, st16 = _quad_trajectory(jnp.bfloat16)
+    assert st16["m"]["x"].dtype == jnp.bfloat16
+    assert st16["v"]["x"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(w16["x"]), np.asarray(w32["x"]),
+                               atol=5e-2)
+
+
+def test_bf16_state_halves_optimizer_memory():
+    w = {"x": jnp.zeros((1024,)), "y": jnp.zeros((64, 8))}
+    s32 = adam_init(w, jnp.float32)
+    s16 = adam_init(w, jnp.bfloat16)
+    nbytes = lambda s: sum(  # noqa: E731
+        leaf.nbytes for k in ("m", "v") for leaf in jax.tree.leaves(s[k]))
+    assert nbytes(s16) * 2 == nbytes(s32)
+
+
+def test_f32_default_state_is_bit_identical_to_explicit():
+    """state_dtype=f32 (the default) is a no-op: same bits as before the
+    quantized-state option existed."""
+    w_def, st_def = _quad_trajectory(jnp.float32)
+    w = {"x": jnp.array([5.0, -3.0, 2.5])}
+    st = adam_init(w)                          # default dtype
+    for _ in range(60):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(w)
+        w, st = adam_update(w, g, st, 1e-1)
+    np.testing.assert_array_equal(np.asarray(w_def["x"]),
+                                  np.asarray(w["x"]))
+    assert st["m"]["x"].dtype == jnp.float32
