@@ -1,0 +1,20 @@
+"""zvlint — static analysis for this repo's hand-maintained invariants.
+
+``python -m repro.analysis src`` runs five rules, each the static
+shadow of a bug class this repo has shipped and fixed (docs/analysis.md):
+
+  rng-discipline      keyed derivation only; no ad-hoc seed arithmetic,
+                      seed-blind streams, or wall-clock in the core
+  lock-discipline     `# guarded-by:` attributes only under their lock
+  kernel-float-safety no FMA/reciprocal/literal rewrites in bit-exact
+                      kernels
+  wire-closure        message-kind literals closed over wire.KINDS
+  config-coherence    config fields <-> train.py flags, both directions
+"""
+from repro.analysis.core import (Finding, Report, Rule, all_rules, analyze,
+                                 register)
+# importing the rule modules registers them
+from repro.analysis import (rules_config, rules_kernel, rules_lock,  # noqa: F401,E402
+                            rules_rng, rules_wire)
+
+__all__ = ["Finding", "Report", "Rule", "all_rules", "analyze", "register"]

@@ -1,0 +1,68 @@
+"""Committed baseline of grandfathered findings.
+
+A finding is matched against the baseline on ``(rule, path, stripped
+source line text)`` — NOT the line number — so unrelated edits that
+shift lines never invalidate an entry, while editing the offending line
+itself (or fixing it) retires the entry naturally. Identical lines in
+one file share an entry with a count.
+
+Workflow: ``python -m repro.analysis --update-baseline`` rewrites
+``zvlint_baseline.json`` from the current findings; the CI gate then
+fails only on findings NOT covered by the committed file. The repo's
+own baseline is kept EMPTY — every day-one finding was either fixed or
+inline-suppressed with a justification — so the file exists to carry
+the mechanism, not debt.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+
+VERSION = 1
+
+
+class Baseline:
+    def __init__(self, entries: Counter | None = None):
+        self.entries: Counter = Counter(entries or {})
+
+    @staticmethod
+    def _key(finding, text: str):
+        return (finding.rule, finding.path, text)
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        data = json.loads(Path(path).read_text())
+        if data.get("version") != VERSION:
+            raise ValueError(f"unsupported baseline version in {path}")
+        c = Counter()
+        for e in data.get("entries", []):
+            c[(e["rule"], e["path"], e["text"])] += int(e.get("count", 1))
+        return cls(c)
+
+    @classmethod
+    def from_findings(cls, findings, line_text) -> "Baseline":
+        c = Counter()
+        for f in findings:
+            c[cls._key(f, line_text(f))] += 1
+        return cls(c)
+
+    def split(self, findings, line_text):
+        """-> (new, baselined). Each entry absorbs at most its count."""
+        budget = Counter(self.entries)
+        new, old = [], []
+        for f in findings:
+            k = self._key(f, line_text(f))
+            if budget[k] > 0:
+                budget[k] -= 1
+                old.append(f)
+            else:
+                new.append(f)
+        return new, old
+
+    def dump(self, path) -> None:
+        entries = [{"rule": r, "path": p, "text": t, "count": n}
+                   for (r, p, t), n in sorted(self.entries.items())]
+        Path(path).write_text(
+            json.dumps({"version": VERSION, "entries": entries}, indent=2)
+            + "\n")

@@ -1,0 +1,94 @@
+"""zvlint CLI: ``python -m repro.analysis [paths...]``.
+
+Exit status is the CI contract: 0 when every finding is covered by the
+committed baseline, 1 otherwise. ``--format github`` emits
+``::error`` workflow commands so findings annotate the PR diff.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.baseline import Baseline
+from repro.analysis.core import all_rules, analyze
+
+DEFAULT_BASELINE = "zvlint_baseline.json"
+
+
+def _gh_escape(s: str) -> str:
+    return (s.replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="zvlint: determinism / lock-discipline / wire-invariant "
+                    "static analysis for the VFL stack (docs/analysis.md)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--format", choices=("text", "github", "json"),
+                    default="text")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline file (default: {DEFAULT_BASELINE}; "
+                         "ignored if missing)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, baseline or not")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings and "
+                         "exit 0")
+    ap.add_argument("--select", metavar="RULES",
+                    help="comma-separated rule names to run")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, rule in sorted(all_rules().items()):
+            print(f"{name:22s} [{rule.scope:7s}] {rule.description}")
+        return 0
+
+    select = None
+    if args.select:
+        select = [s.strip() for s in args.select.split(",") if s.strip()]
+        unknown = set(select) - set(all_rules())
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(sorted(unknown))}")
+
+    report = analyze(args.paths, select=select)
+
+    if args.update_baseline:
+        Baseline.from_findings(report.findings,
+                               report.line_text).dump(args.baseline)
+        print(f"wrote {len(report.findings)} entr"
+              f"{'y' if len(report.findings) == 1 else 'ies'} to "
+              f"{args.baseline}")
+        return 0
+
+    new, baselined = report.findings, []
+    if not args.no_baseline and Path(args.baseline).is_file():
+        new, baselined = Baseline.load(args.baseline).split(
+            report.findings, report.line_text)
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [{"rule": f.rule, "path": f.path, "line": f.line,
+                          "col": f.col, "message": f.message}
+                         for f in new],
+            "summary": {"files": report.n_files, "new": len(new),
+                        "baselined": len(baselined),
+                        "suppressed": report.n_suppressed},
+        }, indent=2))
+    elif args.format == "github":
+        for f in new:
+            print(f"::error file={f.path},line={f.line},"
+                  f"col={max(f.col, 1)}::"
+                  f"{_gh_escape(f'[{f.rule}] {f.message}')}")
+    else:
+        for f in new:
+            print(f"{f.path}:{f.line}:{f.col}: [{f.rule}] {f.message}")
+    if args.format != "json":
+        print(f"zvlint: {len(new)} finding(s) in {report.n_files} files "
+              f"({len(baselined)} baselined, {report.n_suppressed} "
+              "suppressed)", file=sys.stderr)
+    return 1 if new else 0

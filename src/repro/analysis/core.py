@@ -1,0 +1,230 @@
+"""zvlint core: file contexts, the rule registry, suppressions, runner.
+
+The analyzer exists because every headline claim in this repo — TCP
+bit-identical to in-memory, fused bit-identical to unfused, DP-off
+byte-identical to undefended — rests on hand-maintained invariants
+(keyed RNG derivation, lock-guarded server state, anti-rewrite guards,
+a closed ``Message.kind`` set) that 294 dynamic tests only check AFTER
+a violation is written. Each rule here rejects one hazard class this
+repo has actually shipped and fixed, at review time.
+
+Vocabulary understood by the framework (all inside ``#`` comments):
+
+  ``zvlint: disable=rule-a,rule-b``  suppress those rules on this line;
+                                     on a comment-only line it covers
+                                     the next code line (room for the
+                                     justification); on a ``def``/
+                                     ``class`` line, the whole body
+  ``zvlint: bit-exact``              (on a ``def`` line) opt this
+                                     function into kernel-float-safety
+  ``zvlint: measurement``            this line reads wall-clock for
+                                     instrumentation, not for logic
+  ``guarded-by: <lock expr>``        (on a ``self.x = ...`` line) the
+                                     attribute may only be touched
+                                     under ``with <lock expr>:``
+  ``flag: --name`` / ``internal-only: <why>``
+                                     config-field <-> CLI-flag mapping
+
+Rules subclass :class:`Rule` and self-register via :func:`register`;
+``scope = "file"`` rules see one :class:`FileContext` at a time,
+``scope = "project"`` rules see the whole analyzed set (for cross-file
+invariants such as the wire-kind closure).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+
+DISABLE_RE = re.compile(r"zvlint:\s*disable=([A-Za-z0-9_,\- ]+)")
+BIT_EXACT_RE = re.compile(r"zvlint:\s*bit-exact\b")
+MEASUREMENT_RE = re.compile(r"zvlint:\s*measurement\b")
+GUARDED_BY_RE = re.compile(r"guarded-by:\s*([A-Za-z_][\w.]*)")
+FLAG_RE = re.compile(r"\bflag:\s*(--[A-Za-z0-9][\w\-]*)")
+INTERNAL_RE = re.compile(r"\binternal-only\b")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location (1-based line/col)."""
+
+    rule: str
+    path: str          # posix path as given to the runner (repo-relative
+    line: int          # when analyzing from the repo root)
+    col: int
+    message: str
+
+    @property
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+
+class FileContext:
+    """One parsed source file: AST, per-line comments, suppressions."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        # tokenize (not regex) so '#' inside string literals never reads
+        # as a comment; one comment max per physical line in Python
+        self.comments: dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except tokenize.TokenError:   # unterminated block at EOF etc.
+            pass
+        self._disabled: dict[int, set[str]] = {}
+        for ln, text in self.comments.items():
+            m = DISABLE_RE.search(text)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            if not rules:
+                continue
+            # a comment-only line suppresses the NEXT code line (so the
+            # justification fits without fighting the line length)
+            if self.lines[ln - 1].lstrip().startswith("#"):
+                while ln <= len(self.lines) and (
+                        not self.lines[ln - 1].strip()
+                        or self.lines[ln - 1].lstrip().startswith("#")):
+                    ln += 1
+            self._disabled.setdefault(ln, set()).update(rules)
+        # a disable comment on a def/class line covers the whole body
+        self._spans: list[tuple[int, int, set[str]]] = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                rules = self._disabled.get(node.lineno)
+                if rules:
+                    self._spans.append(
+                        (node.lineno, node.end_lineno or node.lineno, rules))
+
+    def comment(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        rules = self._disabled.get(line)
+        if rules and (rule in rules or "all" in rules):
+            return True
+        return any(lo <= line <= hi and (rule in rules or "all" in rules)
+                   for lo, hi, rules in self._spans)
+
+
+class Rule:
+    """Base class; subclasses set name/scope and override one check."""
+
+    name: str = ""
+    scope: str = "file"        # "file" | "project"
+    description: str = ""
+
+    def check_file(self, ctx: FileContext) -> list[Finding]:
+        return []
+
+    def check_project(self, ctxs: list[FileContext]) -> list[Finding]:
+        return []
+
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the global registry."""
+    if not cls.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def all_rules() -> dict[str, Rule]:
+    return dict(_REGISTRY)
+
+
+def dotted_name(node) -> str | None:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _iter_py_files(paths) -> list[Path]:
+    out = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(sorted(q for q in p.rglob("*.py")
+                              if "__pycache__" not in q.parts
+                              and not any(part.startswith(".")
+                                          for part in q.parts)))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+@dataclass
+class Report:
+    findings: list[Finding]
+    ctxs: list[FileContext] = field(default_factory=list)
+    n_files: int = 0
+    n_suppressed: int = 0
+
+    def context(self, rel: str) -> FileContext | None:
+        return next((c for c in self.ctxs if c.rel == rel), None)
+
+    def line_text(self, f: Finding) -> str:
+        ctx = self.context(f.path)
+        return ctx.line_text(f.line) if ctx else ""
+
+
+def analyze(paths, select=None) -> Report:
+    """Run the registered rules over ``paths`` (files or directories).
+
+    ``select`` is an optional iterable of rule names. Suppressed
+    findings are filtered here (counted in the report), so rules never
+    need to reason about ``zvlint: disable``.
+    """
+    ctxs: list[Finding] = []
+    findings: list[Finding] = []
+    ctxs = []
+    for path in _iter_py_files(paths):
+        rel = path.as_posix()
+        try:
+            ctxs.append(FileContext(path, rel, path.read_text()))
+        except SyntaxError as e:
+            findings.append(Finding("parse", rel, e.lineno or 1, 0,
+                                    f"syntax error: {e.msg}"))
+    names = sorted(_REGISTRY) if select is None else [
+        n for n in sorted(_REGISTRY) if n in set(select)]
+    for name in names:
+        rule = _REGISTRY[name]
+        if rule.scope == "file":
+            for ctx in ctxs:
+                findings.extend(rule.check_file(ctx))
+        else:
+            findings.extend(rule.check_project(ctxs))
+    by_rel = {c.rel: c for c in ctxs}
+    kept, n_sup = [], 0
+    for f in findings:
+        ctx = by_rel.get(f.path)
+        if ctx is not None and ctx.suppressed(f.line, f.rule):
+            n_sup += 1
+        else:
+            kept.append(f)
+    kept.sort(key=lambda f: f.sort_key)
+    return Report(kept, ctxs, len(ctxs), n_sup)

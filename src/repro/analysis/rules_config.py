@@ -1,0 +1,110 @@
+"""config-coherence: every config field is reachable or declared not to be.
+
+``VFLConfig`` / ``DPConfig`` / ``RuntimeConfig`` are the contract
+between the library and the ``train.py`` CLI. A field nobody can set
+from the launcher is dead surface the README still advertises; a
+``--dp-*`` flag that stopped mapping to a ``DPConfig`` field is a knob
+that silently does nothing. Each dataclass field must carry exactly
+one of:
+
+  * an auto-match — ``train.py`` defines ``--<field-name-with-dashes>``;
+  * ``# flag: --name`` — the field is set via a differently-named flag
+    (the rule verifies the flag really exists);
+  * ``# internal-only: <why>`` — deliberately not CLI-reachable
+    (resolved by code, library-only knob, ...), with the reason.
+
+Reverse direction: every ``--dp-*`` flag in ``train.py`` must map to a
+``DPConfig`` field (auto-match or claimed by a ``# flag:``
+annotation). Launcher-level flags (``--arch``, ``--steps``, ...) are
+launcher concerns, not config fields, so the reverse check is scoped
+to the ``--dp-`` namespace where the mapping is 1:1 by design.
+
+The rule runs only when both sides are in the analyzed set: the config
+classes and a file named ``train.py`` containing ``add_argument``
+calls (true for the repo run over ``src/`` and for fixture sets).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.core import (FLAG_RE, Finding, INTERNAL_RE, Rule,
+                                 register)
+
+CONFIG_CLASSES = ("VFLConfig", "DPConfig", "RuntimeConfig")
+REVERSE_PREFIXES = {"DPConfig": "--dp-"}
+
+
+@register
+class ConfigCoherence(Rule):
+    name = "config-coherence"
+    scope = "project"
+    description = ("every VFLConfig/DPConfig/RuntimeConfig field needs a "
+                   "reachable train.py flag, a `# flag: --x` annotation, "
+                   "or `# internal-only: <why>`; every --dp-* flag must "
+                   "map back to a DPConfig field")
+
+    def check_project(self, ctxs) -> list[Finding]:
+        classes = []   # (ctx, ClassDef)
+        for ctx in ctxs:
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, ast.ClassDef) and \
+                        node.name in CONFIG_CLASSES:
+                    classes.append((ctx, node))
+        train = next((c for c in ctxs if Path(c.rel).name == "train.py"),
+                     None)
+        if not classes or train is None:
+            return []
+        flags: dict[str, int] = {}
+        for node in ast.walk(train.tree):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "add_argument" and node.args and \
+                    isinstance(node.args[0], ast.Constant) and \
+                    isinstance(node.args[0].value, str) and \
+                    node.args[0].value.startswith("--"):
+                flags[node.args[0].value] = node.args[0].lineno
+        if not flags:
+            return []
+        out: list[Finding] = []
+        claimed: dict[str, set[str]] = {n: set() for n in CONFIG_CLASSES}
+        for ctx, cls in classes:
+            for field in cls.body:
+                if not (isinstance(field, ast.AnnAssign)
+                        and isinstance(field.target, ast.Name)):
+                    continue
+                name = field.target.id
+                if name.startswith("_"):
+                    continue
+                comment = ctx.comment(field.lineno)
+                auto = "--" + name.replace("_", "-")
+                m = FLAG_RE.search(comment)
+                if m:
+                    claimed[cls.name].add(m.group(1))
+                    if m.group(1) not in flags:
+                        out.append(Finding(
+                            self.name, ctx.rel, field.lineno,
+                            field.col_offset,
+                            f"{cls.name}.{name} is annotated "
+                            f"`# flag: {m.group(1)}` but train.py defines "
+                            "no such flag — the annotation has drifted"))
+                elif INTERNAL_RE.search(comment):
+                    pass
+                elif auto in flags:
+                    claimed[cls.name].add(auto)
+                else:
+                    out.append(Finding(
+                        self.name, ctx.rel, field.lineno, field.col_offset,
+                        f"{cls.name}.{name} has no reachable train.py flag "
+                        f"(no `{auto}`) and no annotation — add "
+                        "`# flag: --x` or `# internal-only: <why>`"))
+        for cls_name, prefix in REVERSE_PREFIXES.items():
+            for flag, line in flags.items():
+                if flag.startswith(prefix) and \
+                        flag not in claimed[cls_name]:
+                    out.append(Finding(
+                        self.name, train.rel, line, 0,
+                        f"flag `{flag}` does not map to any {cls_name} "
+                        "field — a defense knob that sets nothing is a "
+                        "silent no-op"))
+        return out

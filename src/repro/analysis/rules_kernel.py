@@ -1,0 +1,92 @@
+"""kernel-float-safety: bit-exact kernels must not hand XLA a rewrite.
+
+Functions opted in with ``# zvlint: bit-exact`` on their ``def`` line
+are the ones whose output is pinned BITWISE against an eager oracle
+(tests/test_kernels.py). Three shapes break that parity, all caught by
+PR 6 the slow way — as single-ulp diffs in a fused trace:
+
+  * ``a*b + c`` / ``c - a*b`` — XLA contracts a multiply feeding an
+    add/sub into an FMA, which rounds once where the eager oracle
+    rounds twice. Use ``rounded_product(a, b, z)``.
+  * ``x / CONST`` — the algebraic simplifier rewrites division by a
+    compile-time constant into multiply-by-reciprocal (1 ulp off for
+    some operands). Use ``rounded_quotient(x, CONST, z)``.
+  * a bare Python float literal as a direct arithmetic operand — it
+    enters the trace as f64-rounded-to-f32 wherever constant folding
+    happens to run; bind it through ``np.float32(...)`` (a Call
+    operand, which this rule ignores) so the value is pinned before
+    tracing.
+
+Eager-only code paths inside a marked function (the ``z is None``
+branches kept for un-jitted callers) carry inline suppressions with
+that justification — eager dispatch compiles ops one at a time and
+can never contract.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import BIT_EXACT_RE, Finding, Rule, register
+
+_GUARD_CALLS = {"rounded_product", "rounded_quotient"}
+
+
+def _is_guard_call(node) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in _GUARD_CALLS)
+
+
+def _float_const(node) -> bool:
+    return isinstance(node, ast.Constant) and isinstance(node.value, float)
+
+
+@register
+class KernelFloatSafety(Rule):
+    name = "kernel-float-safety"
+    scope = "file"
+    description = ("in functions marked `# zvlint: bit-exact`, flag "
+                   "mul-feeding-add/sub (FMA contraction), division by a "
+                   "constant (reciprocal rewrite), and bare float "
+                   "literals — use rounded_product/rounded_quotient")
+
+    def check_file(self, ctx) -> list[Finding]:
+        out: list[Finding] = []
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not BIT_EXACT_RE.search(ctx.comment(fn.lineno)):
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.BinOp):
+                    continue
+                msg = None
+                if isinstance(node.op, (ast.Add, ast.Sub)):
+                    mult = next((s for s in (node.left, node.right)
+                                 if isinstance(s, ast.BinOp)
+                                 and isinstance(s.op, ast.Mult)), None)
+                    if mult is not None:
+                        msg = (f"`{ast.unparse(node)}`: multiply feeding "
+                               "add/sub contracts to an FMA under XLA and "
+                               "drifts 1 ulp off the eager oracle (PR-6); "
+                               "use rounded_product(a, b, z)")
+                if msg is None and isinstance(node.op, ast.Div):
+                    d = node.right
+                    if _float_const(d) or (
+                            isinstance(d, ast.Constant)
+                            and isinstance(d.value, int)) or (
+                            isinstance(d, ast.Name) and d.id.isupper()):
+                        msg = (f"`{ast.unparse(node)}`: division by a "
+                               "compile-time constant rewrites to "
+                               "multiply-by-reciprocal under XLA; use "
+                               "rounded_quotient(a, b, z)")
+                if msg is None and (_float_const(node.left)
+                                    or _float_const(node.right)):
+                    msg = (f"`{ast.unparse(node)}`: bare float literal in "
+                           "bit-exact arithmetic — bind it through "
+                           "np.float32(...) so its value is pinned before "
+                           "tracing")
+                if msg is not None:
+                    out.append(Finding(self.name, ctx.rel, node.lineno,
+                                       node.col_offset, msg))
+        return out

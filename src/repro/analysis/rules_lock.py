@@ -1,0 +1,152 @@
+"""lock-discipline: a static guarded-by race detector.
+
+Annotate shared mutable state where it is first assigned::
+
+    class _Server:
+        def __init__(self, ...):
+            self.claimed = 0          # guarded-by: self.lock
+
+Every later read or write of ``self.claimed`` anywhere in the class
+(outside ``__init__``) must then sit lexically inside a
+``with self.lock:`` block. This statically reproduces the two races
+this repo has actually shipped:
+
+  * PR-2 budget race — ``if self.claimed < budget: self.claimed += 1``
+    executed OUTSIDE the lock: check-then-act on a guarded counter.
+  * PR-4 torn snapshot — the checkpointer read ``w0`` and ``_replies``
+    as two separate unlocked reads while the dispatcher mutated
+    between them.
+
+Foreign handles: code that reaches guarded state through another
+object's handle (``self.server.c_table`` in the trainer,
+``trainer.core.losses`` in the runtime) must hold THAT object's lock
+(``with self.server.lock:``). Only ``.server`` / ``.core`` handle
+names are tracked — the two executor cores this repo has.
+
+Reads that are safe by a structural argument (single writer, pre-/
+post-thread phase) are suppressed inline with the argument spelled
+out, e.g. ``# zvlint: disable=lock-discipline — read after join()``.
+An RLock makes holding the lock re-entrantly free, so "just take the
+lock" is almost always the better fix.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Finding, GUARDED_BY_RE, Rule, register)
+
+HANDLE_NAMES = {"server", "core"}
+
+
+def _self_attr(node) -> str | None:
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+class _Scanner(ast.NodeVisitor):
+    """Walk one method tracking the lexically-held lock set."""
+
+    def __init__(self, rule, ctx, guards, foreign):
+        self.rule, self.ctx = rule, ctx
+        self.guards = guards          # attr -> lock expr (this class)
+        self.foreign = foreign        # attr -> set of lock suffixes
+        self.locks: list[str] = []
+        self.findings: list[Finding] = []
+
+    def visit_With(self, node):
+        held = [ast.unparse(item.context_expr) for item in node.items]
+        self.locks.extend(held)
+        self.generic_visit(node)
+        del self.locks[-len(held):]
+
+    # a nested def/lambda is a closure that may run outside the with
+    # block it was defined in — its body starts with no locks held
+    def visit_FunctionDef(self, node):
+        saved, self.locks = self.locks, []
+        self.generic_visit(node)
+        self.locks = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+    def _flag(self, node, attr, need):
+        self.findings.append(Finding(
+            self.rule.name, self.ctx.rel, node.lineno, node.col_offset,
+            f"`{ast.unparse(node)}` is guarded-by `{need}` but accessed "
+            f"outside `with {need}:` — check-then-act/torn-read hazard "
+            "(PR-2 budget race, PR-4 torn snapshot)"))
+
+    def visit_Attribute(self, node):
+        attr = _self_attr(node)
+        if attr is not None:
+            need = self.guards.get(attr)
+            if need is not None and need not in self.locks:
+                self._flag(node, attr, need)
+        elif node.attr in self.foreign:
+            base = ast.unparse(node.value)
+            if base.rsplit(".", 1)[-1] in HANDLE_NAMES:
+                needs = {f"{base}.{sfx}" for sfx in self.foreign[node.attr]}
+                if not needs & set(self.locks):
+                    self._flag(node, node.attr, sorted(needs)[0])
+        self.generic_visit(node)
+
+
+@register
+class LockDiscipline(Rule):
+    name = "lock-discipline"
+    scope = "project"
+    description = ("attributes annotated `# guarded-by: <lock>` may only "
+                   "be accessed inside `with <lock>:`; foreign access via "
+                   ".server/.core handles must hold that object's lock")
+
+    def check_project(self, ctxs) -> list[Finding]:
+        # pass 1: collect annotations per (file, class)
+        per_class: dict[tuple[str, str], dict[str, str]] = {}
+        foreign: dict[str, set[str]] = {}
+        for ctx in ctxs:
+            for cls in ast.walk(ctx.tree):
+                if not isinstance(cls, ast.ClassDef):
+                    continue
+                guards: dict[str, str] = {}
+                for node in ast.walk(cls):
+                    if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                        continue
+                    m = GUARDED_BY_RE.search(ctx.comment(node.lineno))
+                    if not m:
+                        continue
+                    targets = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    for t in targets:
+                        attr = _self_attr(t)
+                        if attr is not None:
+                            guards[attr] = m.group(1)
+                if guards:
+                    per_class[(ctx.rel, cls.name)] = guards
+                    for attr, lock in guards.items():
+                        # suffix a foreign holder appends to its handle:
+                        # 'self.lock' -> '<handle>.lock'
+                        sfx = lock.split(".", 1)[1] if "." in lock else lock
+                        foreign.setdefault(attr, set()).add(sfx)
+        if not per_class:
+            return []
+        # pass 2: check every method of every annotated class, and
+        # foreign-handle accesses anywhere
+        findings: list[Finding] = []
+        for ctx in ctxs:
+            for cls in ast.walk(ctx.tree):
+                if not isinstance(cls, ast.ClassDef):
+                    continue
+                guards = per_class.get((ctx.rel, cls.name), {})
+                for meth in cls.body:
+                    if not isinstance(meth, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                        continue
+                    if meth.name == "__init__":
+                        continue   # construction predates sharing
+                    sc = _Scanner(self, ctx, guards, foreign)
+                    for stmt in meth.body:
+                        sc.visit(stmt)
+                    findings.extend(sc.findings)
+        return findings

@@ -1,0 +1,159 @@
+"""rng-discipline: all randomness in the deterministic core must come
+through the approved derivation helpers.
+
+Hazard classes (all shipped at some point in this repo's history):
+
+  * ad-hoc seed arithmetic — PR 2 fixed a perturbation stream that two
+    call sites derived with different inline formulas; the surviving
+    convention is ONE helper per derivation (``party_rng_seed``,
+    ``trainer_keys``, ``fold_name``, ``draw_round``) so the executors
+    can never drift apart. ``seed * 97 + m`` inline is the bug shape.
+  * seed-blind streams — PR 2's server perturbation key was built from
+    a variable that was NOT a seed (the update counter), silently
+    correlating rounds. Constructing a generator from a variable whose
+    name does not look like a seed is the static shadow of that bug.
+  * wall-clock / entropy in the replayable core — ``time.time()``,
+    ``default_rng()`` with no seed, stdlib ``random``, ``uuid4``:
+    any of these makes a transcript non-replayable. Timing
+    instrumentation is fine behind ``# zvlint: measurement``
+    (``time.perf_counter``/``monotonic`` are always allowed — they
+    measure, they never feed state).
+
+Scope: files under ``core/``, ``runtime/``, ``dp/``, ``kernels/``
+path segments. ``utils/prng.py`` and the bodies of the approved
+helpers themselves are exempt (they ARE the derivation layer).
+Plain integer-literal seeds (``jax.random.key(0)``) are allowed: a
+literal is reproducible by construction — the hazards are drifting
+formulas and non-seed variables, not constants.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.core import (Finding, MEASUREMENT_RE, Rule, dotted_name,
+                                 register)
+
+SCOPE_PARTS = {"core", "runtime", "dp", "kernels"}
+APPROVED_HELPERS = {"fold_name", "party_rng_seed", "trainer_keys",
+                    "draw_round"}
+EXEMPT_BASENAMES = {"prng.py"}
+
+# constructors that turn a seed into a stream: final attr, base must
+# mention 'random'
+_CONSTRUCTORS = {"default_rng", "PRNGKey", "key"}
+# always-nondeterministic calls (full dotted name)
+_NONDET = {
+    "time.time": "wall-clock read",
+    "datetime.now": "wall-clock read",
+    "datetime.utcnow": "wall-clock read",
+    "datetime.datetime.now": "wall-clock read",
+    "datetime.datetime.utcnow": "wall-clock read",
+    "os.urandom": "OS entropy",
+    "uuid.uuid4": "OS entropy",
+    "np.random.seed": "legacy process-global seeding",
+    "numpy.random.seed": "legacy process-global seeding",
+}
+
+
+def _terminal(node) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _looks_like_seed(node) -> bool:
+    return "seed" in _terminal(node).lower()
+
+
+def _adhoc_binop(node) -> ast.BinOp | None:
+    """First BinOp under ``node`` that involves a variable (constants-only
+    arithmetic like ``1 << 31`` is fine)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.BinOp) and any(
+                isinstance(x, (ast.Name, ast.Attribute))
+                for x in ast.walk(sub)):
+            return sub
+    return None
+
+
+@register
+class RngDiscipline(Rule):
+    name = "rng-discipline"
+    scope = "file"
+    description = ("randomness in core/runtime/dp/kernels must be derived "
+                   "via party_rng_seed/trainer_keys/fold_name/draw_round; "
+                   "no ad-hoc seed arithmetic, seed-blind streams, or "
+                   "wall-clock in the replayable core")
+
+    def check_file(self, ctx) -> list[Finding]:
+        parts = set(Path(ctx.rel).parts)
+        if not (parts & SCOPE_PARTS) or Path(ctx.rel).name in EXEMPT_BASENAMES:
+            return []
+        out: list[Finding] = []
+        # line spans of approved helper bodies (they may use arithmetic:
+        # they are the one place the formula is allowed to live)
+        exempt_spans = [
+            (n.lineno, n.end_lineno or n.lineno)
+            for n in ast.walk(ctx.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and n.name in APPROVED_HELPERS]
+
+        def exempt(line: int) -> bool:
+            return any(lo <= line <= hi for lo, hi in exempt_spans)
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            full = dotted_name(node.func)
+            if full is None or exempt(node.lineno):
+                continue
+            term = full.rsplit(".", 1)[-1]
+            emit = lambda msg, n=node: out.append(   # noqa: E731
+                Finding(self.name, ctx.rel, n.lineno, n.col_offset, msg))
+            if full in _NONDET:
+                if not MEASUREMENT_RE.search(ctx.comment(node.lineno)):
+                    emit(f"`{full}()` is {_NONDET[full]} — nondeterministic "
+                         "in the replayable core; use time.perf_counter for "
+                         "timing (annotate `# zvlint: measurement`) or a "
+                         "derived seed for state")
+                continue
+            if full.startswith("random.") and full.count(".") == 1:
+                emit(f"stdlib `{full}()` uses the process-global RNG — "
+                     "derive a keyed stream via party_rng_seed/fold_name "
+                     "instead")
+                continue
+            if term in _CONSTRUCTORS and "random" in full:
+                if not node.args:
+                    emit(f"`{full}()` with no seed argument draws OS "
+                         "entropy — every stream in the core must be "
+                         "derived from the run seed")
+                    continue
+                arg = node.args[0]
+                bad = _adhoc_binop(arg)
+                if bad is not None:
+                    emit(f"ad-hoc seed arithmetic `{ast.unparse(bad)}` — "
+                         "inline derivation formulas drift between call "
+                         "sites (PR-2); route through party_rng_seed/"
+                         "trainer_keys/fold_name")
+                elif isinstance(arg, (ast.Name, ast.Attribute)) and \
+                        not _looks_like_seed(arg):
+                    emit(f"`{full}({ast.unparse(arg)})` seeds a stream "
+                         "from a variable that is not a seed — the PR-2 "
+                         "seed-blind stream shape; derive the key from "
+                         "the run seed via fold_name/trainer_keys")
+            elif term in ("fold_in", "split") and "random" in full:
+                # split's count arg may legitimately be arithmetic (q+2);
+                # only the KEY operand matters there, any operand for fold_in
+                check = node.args[:1] if term == "split" else node.args
+                for arg in check:
+                    bad = _adhoc_binop(arg)
+                    if bad is not None:
+                        emit(f"ad-hoc seed arithmetic `{ast.unparse(bad)}` "
+                             f"inside `{full}` — use fold_name/"
+                             "party_rng_seed so the derivation has one "
+                             "spelling")
+                        break
+        return out

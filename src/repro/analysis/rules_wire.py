@@ -1,0 +1,152 @@
+"""wire-closure: the set of message kinds is CLOSED and fully covered.
+
+Everything the privacy story claims rests on ``wire.KINDS`` being the
+complete list of what crosses the party/server boundary: the transport
+codec enumerates it (``KINDS.index``), the channel accounts bytes by
+it, and Theorem 1's threat models are evaluated per kind on recorded
+transcripts. A kind string invented at a call site — e.g.
+``Message.make("grad_up", ...)`` — would ship traffic that the codec
+cannot version, the accountant cannot price, and the privacy audit
+never sees. This rule closes the loop statically:
+
+  * closure — every string literal used in a kind position anywhere
+    (first arg of ``Message.make``, any ``kind=`` keyword, comparisons
+    against a ``.kind`` attribute), plus any ``*_up``/``*_down``
+    literal inside the four wire-adjacent modules (``wire.py``,
+    ``transport.py``, ``privacy.py``, ``comms.py``), must be a member
+    of ``KINDS``;
+  * partition — ``UP_KINDS`` and ``DOWN_KINDS`` must partition
+    ``KINDS`` exactly (the exposure model is directional);
+  * threat-model coverage — every kind must appear in ``privacy.py``,
+    so adding a kind forces a decision about what an adversary sees.
+
+The rule is inert unless an analyzed file named ``wire.py`` defines a
+module-level ``KINDS`` tuple of string literals (true for the repo run
+over ``src/`` and for the fixture sets).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from repro.analysis.core import Finding, Rule, register
+
+KIND_RE = re.compile(r"^[a-z][a-z0-9]*(?:_[a-z0-9]+)*_(?:up|down)$")
+_LITERAL_SCAN_FILES = {"wire.py", "transport.py", "privacy.py", "comms.py"}
+
+
+def _str_tuple(node) -> tuple[str, ...] | None:
+    if isinstance(node, (ast.Tuple, ast.List)) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, str)
+            for e in node.elts):
+        return tuple(e.value for e in node.elts)
+    return None
+
+
+def _kind_sites(tree):
+    """(literal, line, col, strict) for strings used in kind positions.
+
+    ``Message.make``'s first argument is unambiguously a wire kind
+    (strict=True: ANY literal there must be registered). ``kind=``
+    keywords and ``.kind ==`` comparisons also exist in unrelated
+    domains (model-layer kinds, problem kinds), so those sites only
+    count when the literal matches the wire naming law ``*_up``/
+    ``*_down`` — a lookalike that is not registered is the bug.
+    """
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr == "make"
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "Message" and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                a = node.args[0]
+                yield a.value, a.lineno, a.col_offset, True
+            for kw in node.keywords:
+                if kw.arg == "kind" and isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, str) \
+                        and KIND_RE.match(kw.value.value):
+                    yield (kw.value.value, kw.value.lineno,
+                           kw.value.col_offset, False)
+        elif isinstance(node, ast.Compare):
+            sides = [node.left, *node.comparators]
+            if any((isinstance(s, ast.Attribute) and s.attr == "kind")
+                   or (isinstance(s, ast.Name) and s.id == "kind")
+                   for s in sides):
+                for s in sides:
+                    if isinstance(s, ast.Constant) and \
+                            isinstance(s.value, str) and \
+                            KIND_RE.match(s.value):
+                        yield s.value, s.lineno, s.col_offset, False
+
+
+@register
+class WireClosure(Rule):
+    name = "wire-closure"
+    scope = "project"
+    description = ("every message-kind string literal must be in "
+                   "wire.KINDS; UP/DOWN must partition KINDS; every kind "
+                   "needs threat-model coverage in privacy.py")
+
+    def check_project(self, ctxs) -> list[Finding]:
+        wire = next((c for c in ctxs if Path(c.rel).name == "wire.py"), None)
+        if wire is None:
+            return []
+        consts: dict[str, tuple[tuple[str, ...], int]] = {}
+        for node in wire.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                vals = _str_tuple(node.value)
+                if vals is not None:
+                    consts[node.targets[0].id] = (vals, node.lineno)
+        if "KINDS" not in consts:
+            return []
+        kinds, kinds_line = consts["KINDS"]
+        out: list[Finding] = []
+
+        def flag(ctx, lit, line, col):
+            out.append(Finding(
+                self.name, ctx.rel, line, col,
+                f"message kind {lit!r} is not in wire.KINDS — register it "
+                "there (transport versioning, channel accounting, and the "
+                "privacy exposure model all enumerate KINDS)"))
+
+        for ctx in ctxs:
+            seen = set()
+            for lit, line, col, _strict in _kind_sites(ctx.tree):
+                seen.add((lit, line, col))
+                if lit not in kinds:
+                    flag(ctx, lit, line, col)
+            if Path(ctx.rel).name in _LITERAL_SCAN_FILES:
+                for node in ast.walk(ctx.tree):
+                    if isinstance(node, ast.Constant) and \
+                            isinstance(node.value, str) and \
+                            KIND_RE.match(node.value) and \
+                            node.value not in kinds and \
+                            (node.value, node.lineno,
+                             node.col_offset) not in seen:
+                        flag(ctx, node.value, node.lineno, node.col_offset)
+        if "UP_KINDS" in consts and "DOWN_KINDS" in consts:
+            up, _ = consts["UP_KINDS"]
+            down, _ = consts["DOWN_KINDS"]
+            if set(up) | set(down) != set(kinds) or set(up) & set(down):
+                out.append(Finding(
+                    self.name, wire.rel, kinds_line, 0,
+                    "UP_KINDS and DOWN_KINDS must partition KINDS exactly "
+                    "— the exposure model is directional"))
+        privacy = next((c for c in ctxs
+                        if Path(c.rel).name == "privacy.py"), None)
+        if privacy is not None:
+            mentioned = {n.value for n in ast.walk(privacy.tree)
+                         if isinstance(n, ast.Constant)
+                         and isinstance(n.value, str)}
+            for k in kinds:
+                if k not in mentioned:
+                    out.append(Finding(
+                        self.name, wire.rel, kinds_line, 0,
+                        f"kind {k!r} has no threat-model coverage in "
+                        "privacy.py — every wire kind must state what an "
+                        "adversary observes"))
+        return out

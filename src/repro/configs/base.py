@@ -193,15 +193,22 @@ class DPConfig:
     the target epsilon once the round budget is known — the exchange
     refuses to run with an uncalibrated target.
     """
-    epsilon: Optional[float] = None     # target eps over the run (inf = off)
-    delta: float = 1e-5
-    clip: Optional[float] = None        # REQUIRED when enabled: |c_i| <= clip
-    mechanism: str = "gaussian"         # gaussian (RDP) | laplace (pure-DP)
-    noise_multiplier: Optional[float] = None   # sigma; noise std = sigma*clip
-    sample_rate: Optional[float] = None  # Poisson-subsampling rate q of the
-    #                                      minibatch draw; opt-in: None means
-    #                                      account WITHOUT amplification (the
-    #                                      pre-existing, conservative curve)
+    epsilon: Optional[float] = None     # flag: --dp-epsilon — target eps
+    #                                     over the run (inf = off)
+    delta: float = 1e-5                 # flag: --dp-delta
+    clip: Optional[float] = None        # flag: --dp-clip — REQUIRED when
+    #                                     enabled: |c_i| <= clip
+    mechanism: str = "gaussian"         # internal-only: gaussian (RDP) |
+    #                                     laplace (pure-DP); library/bench
+    #                                     knob, the CLI defense is gaussian
+    noise_multiplier: Optional[float] = None   # internal-only: sigma (noise
+    #                                     std = sigma*clip) — resolved by the
+    #                                     accountant, never set by hand
+    sample_rate: Optional[float] = None  # internal-only: Poisson-subsampling
+    #                                      rate q of the minibatch draw;
+    #                                      opt-in: None means account WITHOUT
+    #                                      amplification (the pre-existing,
+    #                                      conservative curve)
 
     def __post_init__(self):
         if self.mechanism not in ("gaussian", "laplace"):
@@ -253,26 +260,38 @@ class DPConfig:
 @dataclass(frozen=True)
 class VFLConfig:
     """The paper's framework knobs (Section 3)."""
-    num_parties: int = 8          # q
-    party_hidden: int = 128       # width of the party tower F_m
-    party_layers: int = 2         # depth of F_m (paper: 2-layer FCN)
-    direction: str = "gaussian"   # gaussian (AsyREVEL-Gau) | uniform (-Uni)
-    #                               | rademacher (fused-kernel seed replay)
-    mu: float = 1e-3              # smoothing parameter mu_m
-    lr_party: float = 1e-3        # eta_m
-    lr_server: float = 1e-3 / 8   # eta_0 = eta / q (paper setting)
-    max_delay: int = 4            # tau (Assumption 4)
-    activation_probs: Optional[Tuple[float, ...]] = None  # p_m (Assumption 3)
-    seed_replay: bool = False     # MeZO-style u regeneration (beyond-paper)
-    num_directions: int = 1       # directions averaged per estimate
-    #                               (variance reduction, beyond-paper; the
-    #                               paper points to Liu et al. 2018)
-    lam: float = 1e-4             # regularizer weight lambda
-    perturb_server: bool = True   # also ZO-update w_0 (Eq. 17)
+    num_parties: int = 8          # flag: --parties — q
+    party_hidden: int = 128       # internal-only: width of the party tower
+    #                               F_m (--arch sizes the models)
+    party_layers: int = 2         # internal-only: depth of F_m (paper:
+    #                               2-layer FCN; sized by --arch)
+    direction: str = "gaussian"   # internal-only: gaussian (AsyREVEL-Gau) |
+    #                               uniform (-Uni) | rademacher (fused-kernel
+    #                               seed replay); library/bench knob
+    mu: float = 1e-3              # smoothing parameter mu_m (--mu)
+    lr_party: float = 1e-3        # flag: --lr — eta_m
+    lr_server: float = 1e-3 / 8   # flag: --lr — eta_0 = eta / q (paper
+    #                               setting, derived from the same flag)
+    max_delay: int = 4            # internal-only: tau (Assumption 4) for
+    #                               the thread executor; the TCP runtime's
+    #                               bound is RuntimeConfig.max_staleness
+    activation_probs: Optional[Tuple[float, ...]] = None  # internal-only:
+    #                               p_m (Assumption 3); bench schedule knob
+    seed_replay: bool = False     # internal-only: MeZO-style u regeneration
+    #                               (beyond-paper); implied by --fused
+    num_directions: int = 1       # internal-only: directions averaged per
+    #                               estimate (variance reduction,
+    #                               beyond-paper; paper cites Liu et al.
+    #                               2018); bench/library knob
+    lam: float = 1e-4             # internal-only: regularizer weight lambda
+    #                               (paper constant)
+    perturb_server: bool = True   # internal-only: also ZO-update w_0
+    #                               (Eq. 17); losslessness bench toggles it
     codec: str = "f32"            # up-link payload codec for the c values
-    #                               (core/exchange.py: f32 | bf16 | int8)
-    dp: Optional[DPConfig] = None  # clip-then-noise defense at the codec
-    #                               seam (src/repro/dp; None = undefended)
+    #                               (core/exchange.py: f32|bf16|int8; --codec)
+    dp: Optional[DPConfig] = None  # flag: --dp-epsilon — clip-then-noise
+    #                               defense at the codec seam (src/repro/dp;
+    #                               None = undefended)
     fused: bool = False           # route releases through the fused
     #                               kernels/fused_round fast path (bitwise
     #                               equal to the unfused seam; --fused)
@@ -323,18 +342,30 @@ class RuntimeConfig:
     ahead of the slowest party is PARKED until the laggard catches up
     (None = trust the parties, the pre-enforcement behavior).
     """
-    host: str = "127.0.0.1"
-    port: int = 0                 # 0 = OS-assigned (reported to parties)
-    schedule: str = "serial"      # serial | arrival
-    max_staleness: Optional[int] = None   # tau (Assumption 4); None = off
-    request_timeout_s: float = 15.0   # per recv on an open connection
-    max_retries: int = 4          # reply waits before a party gives up
-    connect_retries: int = 60     # dial attempts (server may start late)
-    connect_backoff_s: float = 0.25
-    heartbeat_s: float = 2.0      # party pings when a reply is this late
-    ckpt_every: int = 1           # party checkpoint cadence (rounds)
-    compute_cost_s: float = 0.0   # simulated local compute per round
-    deadline_s: float = 300.0     # hard wall for the whole federation
+    host: str = "127.0.0.1"       # internal-only: loopback federation;
+    #                               launch/train.py spawns all processes
+    port: int = 0                 # internal-only: 0 = OS-assigned
+    #                               (reported to parties via the port queue)
+    schedule: str = "serial"      # internal-only: serial | arrival dispatch
+    #                               order (train.py's --schedule is the LR
+    #                               schedule; runtime tests set this direct)
+    max_staleness: Optional[int] = None   # internal-only: tau (Assumption
+    #                               4); None = off; bench/test knob
+    request_timeout_s: float = 15.0   # internal-only: per recv on an open
+    #                               connection; fault-injection tests tune it
+    max_retries: int = 4          # internal-only: reply waits before a
+    #                               party gives up
+    connect_retries: int = 60     # internal-only: dial attempts (server
+    #                               may start late)
+    connect_backoff_s: float = 0.25   # internal-only: dial backoff seconds
+    heartbeat_s: float = 2.0      # internal-only: party pings when a reply
+    #                               is this late
+    ckpt_every: int = 1           # internal-only: checkpoint cadence in
+    #                               rounds; --ckpt-dir turns persistence on
+    compute_cost_s: float = 0.0   # internal-only: simulated local compute
+    #                               per round (speedup bench)
+    deadline_s: float = 300.0     # internal-only: hard wall for the whole
+    #                               federation, derived from --steps
 
 
 @dataclass(frozen=True)

@@ -344,19 +344,21 @@ class _Server:
         # bookkeeping in ONE critical section (snapshot atomicity), and
         # handle() takes this lock again internally
         self.lock = threading.RLock()
-        self.w0 = model.init_server(key)
+        self.w0 = model.init_server(key)          # guarded-by: self.lock
         # the server's own perturbation stream derives from the TRAINER
         # seed (folded per update in handle) — a constant base key here
         # would replay the identical direction sequence for every seed
         self.pert_key = pert_key
         # latest function value of each party on each sample ("received
         # previously", Algorithm 1) — warm-started to zeros.
-        self.c_table = np.zeros((n, model.num_parties), np.float32)
-        self.losses = HostRunResult(comms=ex.meter, channel=channel)
+        self.c_table = np.zeros(                  # guarded-by: self.lock
+            (n, model.num_parties), np.float32)
+        self.losses = HostRunResult(              # guarded-by: self.lock
+            comms=ex.meter, channel=channel)
         # update-budget claims (run_async): taken under self.lock BEFORE a
         # party starts its round, so a run does exactly total_updates
         # updates instead of racing past the budget by up to q-1 rounds
-        self.claimed = 0
+        self.claimed = 0                          # guarded-by: self.lock
         # re-stamped by HostAsyncTrainer at run start so history holds
         # run-relative wall-clock (construction-time stamping counted jit
         # warm-up into Fig 3/4's time-to-loss)
@@ -456,7 +458,9 @@ class HostAsyncTrainer:
         vfl, q = self.vfl, self.model.num_parties
         idx = np.arange(self.batch_size) % len(self.y)
         key = jax.random.key(0)
-        with _JAX_LOCK:
+        # server.lock is vacuously uncontended here (workers spawn later)
+        # but taking it keeps one lock order everywhere: server before jax
+        with self.server.lock, _JAX_LOCK:
             cs = jnp.asarray(self.server.c_table[idx])
             y = self.server.y[idx]
             ex, z = self.exchange, fused_round.runtime_zero()
@@ -558,6 +562,7 @@ class HostAsyncTrainer:
             th.start()
         for th in threads:
             th.join()
+        # zvlint: disable=lock-discipline — all writers joined above
         return self.server.losses
 
     def run_sync(self, rounds: int) -> HostRunResult:
@@ -592,6 +597,7 @@ class HostAsyncTrainer:
             th.join()
         if errors:
             raise errors[0]
+        # zvlint: disable=lock-discipline — all writers joined above
         return self.server.losses
 
     def run_serial(self, rounds: int) -> HostRunResult:
@@ -607,4 +613,5 @@ class HostAsyncTrainer:
         for _ in range(rounds):
             for m in range(q):
                 self._party_update(m, rngs[m])
+        # zvlint: disable=lock-discipline — single-threaded schedule
         return self.server.losses

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import VFLConfig
+from repro.core.async_host import party_rng_seed
 from repro.core.asyrevel import _activation_probs
 from repro.core.vfl import VFLModel
 from repro.core.wire import (SERVER, Channel, InMemoryChannel, Message,
@@ -206,7 +207,8 @@ class HostTIGTrainer:
         if self.dp is not None:
             from repro.dp.mechanisms import defend_payload
             k = fold_name(jax.random.fold_in(
-                jax.random.key(self.seed * 1009 + m), rnd), "dp_noise")
+                jax.random.key(party_rng_seed(self.seed, m)), rnd),
+                "dp_noise")
             c_dev = defend_payload(c_dev, k, self.dp)
         c = np.asarray(c_dev, np.float32)
         me = party(m)
@@ -238,7 +240,7 @@ class HostTIGTrainer:
         """Deterministic serial round-robin over parties — the reference
         schedule, mirroring HostAsyncTrainer.run_serial."""
         q = self.model.num_parties
-        rngs = [np.random.default_rng(self.seed * 97 + m)
+        rngs = [np.random.default_rng(party_rng_seed(self.seed, m))
                 for m in range(q)]
         n = len(self.y)
         for _ in range(rounds):

@@ -67,7 +67,7 @@ _SQRT2 = np.float32(np.sqrt(2.0))
 # samplers consume internally. Pure elementwise lax, so the same code
 # runs inside a Pallas kernel body and in a jitted XLA chain.
 
-def uniform_from_bits(bits):
+def uniform_from_bits(bits):   # zvlint: bit-exact
     """== jax.random.uniform(key, shape) on the key that produced bits:
     9-bit shift fills the f32 mantissa, bitcast to [1,2), subtract 1."""
     f = jax.lax.bitcast_convert_type(
@@ -76,7 +76,7 @@ def uniform_from_bits(bits):
     return f - np.float32(1.0)
 
 
-def _open_interval(u01, lo, z=None):
+def _open_interval(u01, lo, z=None):   # zvlint: bit-exact
     """jax.random's uniform(lo, 1) remap: affine then clamp at lo.
 
     In a large fused graph XLA occasionally contracts the ``u01 * span +
@@ -85,11 +85,13 @@ def _open_interval(u01, lo, z=None):
     any jitted caller to pin the product's rounding."""
     span = np.float32(1.0) - lo
     if z is None:
+        # zvlint: disable=kernel-float-safety — the z=None branch is for
+        # EAGER callers only (ops compile one at a time, no contraction)
         return jax.lax.max(lo, u01 * span + lo)
     return jax.lax.max(lo, rounded_product(u01, span, z) + lo)
 
 
-def normal_from_bits(bits, z=None):
+def normal_from_bits(bits, z=None):   # zvlint: bit-exact
     """== jax.random.normal: sqrt(2) * erf_inv(uniform(nextafter(-1,0), 1)).
 
     The oracle materializes this product (jax.random.normal is its own
@@ -102,7 +104,7 @@ def normal_from_bits(bits, z=None):
     return _SQRT2 * r if z is None else rounded_product(_SQRT2, r, z)
 
 
-def laplace_from_bits(bits, z=None):
+def laplace_from_bits(bits, z=None):   # zvlint: bit-exact
     """== jax.random.laplace: sign(u) * log1p(-|u|), u ~ uniform(-1+eps, 1).
     No constant factor on the result, but the interval remap still needs
     the ``z`` contraction guard (see _open_interval)."""
@@ -121,7 +123,7 @@ _NOISE = {"gaussian": normal_from_bits, "laplace": laplace_from_bits}
 
 # ------------------------------------------------- shared defended math ----
 
-def _defend_math(c, dp_bits, dp, z):
+def _defend_math(c, dp_bits, dp, z):   # zvlint: bit-exact
     """Clip-then-noise from raw bits; the fused twin of
     dp/mechanisms.defend_payload. ``dp_bits is None`` covers both dp-off
     and the sigma=0 clip-only case (the oracle skips the draw there).
@@ -137,7 +139,7 @@ def _defend_math(c, dp_bits, dp, z):
     return c + rounded_product(scale, _NOISE[dp.mechanism](dp_bits, z), z)
 
 
-def _encode_math(d, rnd_bits, codec: str, z=None):
+def _encode_math(d, rnd_bits, codec: str, z=None):   # zvlint: bit-exact
     """The codec stage on already-defended f32 values; the fused twin of
     the core/exchange.py codec ``encode`` methods. ``z`` guards the
     /127.0 against the reciprocal-multiply rewrite (rounded_quotient)."""
@@ -148,6 +150,8 @@ def _encode_math(d, rnd_bits, codec: str, z=None):
     if codec != "int8":
         raise ValueError(f"no fused encode for codec {codec!r}")
     amax = jnp.maximum(jnp.max(jnp.abs(d)), 1e-12)
+    # zvlint: disable=kernel-float-safety — the z=None branch is for
+    # EAGER callers only (no simplifier pass rewrites an eager divide)
     scale = (amax / 127.0 if z is None
              else rounded_quotient(amax, 127.0, z))
     x = d / scale
@@ -166,7 +170,7 @@ def _encode_math(d, rnd_bits, codec: str, z=None):
 
 def _make_defend_kernel(*, mechanism, has_dp, has_noise, stage, codec,
                         has_rnd, block, n):
-    def kernel(sm_ref, z_ref, c_ref, dpb_ref, rnb_ref, o_ref):
+    def kernel(sm_ref, z_ref, c_ref, dpb_ref, rnb_ref, o_ref):   # zvlint: bit-exact
         c = c_ref[...].astype(jnp.float32)
         if has_dp:
             c = jnp.clip(c, -sm_ref[0, 0], sm_ref[0, 0])
@@ -175,6 +179,8 @@ def _make_defend_kernel(*, mechanism, has_dp, has_noise, stage, codec,
                 c = c + rounded_product(
                     sm_ref[0, 1], _NOISE[mechanism](dpb_ref[...], z), z)
         if stage == "absmax":
+            # zvlint: disable=kernel-float-safety — int32 lane indexing;
+            # integer FMA contraction is exact, no rounding to drift
             lane = (jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
                     + pl.program_id(0) * block)
             o_ref[...] = jnp.max(
@@ -341,7 +347,7 @@ def _leaf_bits(tree, key):
     return leaves, treedef, bits
 
 
-def zo_apply(w_tree, key, scale, *, impl: str = "xla",
+def zo_apply(w_tree, key, scale, *, impl: str = "xla",   # zvlint: bit-exact
              interpret: bool = True):
     """w - scale * u(key) with Rademacher u regenerated from the seed,
     never stored. ``scale`` is lr*coeff (or -mu for a perturbation).
@@ -355,13 +361,16 @@ def zo_apply(w_tree, key, scale, *, impl: str = "xla",
                                  interpret=interpret).reshape(leaf.shape)
                 for leaf, b in zip(leaves, bits)]
     else:
+        # zvlint: disable=kernel-float-safety — EAGER oracle formula: this
+        # branch dispatches op-by-op, mirroring zoo.apply_zo_update
+        # verbatim; guarding it would change the very bits it pins
         outs = [(leaf.astype(jnp.float32)
                  - scale * rademacher_from_bits(b)).astype(leaf.dtype)
                 for leaf, b in zip(leaves, bits)]
     return jax.tree.unflatten(treedef, outs)
 
 
-def perturb(w_tree, key, mu: float, *, impl: str = "xla",
+def perturb(w_tree, key, mu: float, *, impl: str = "xla",   # zvlint: bit-exact
             interpret: bool = True):
     """(w + mu*u, u) with Rademacher u — the fused twin of zoo.perturb.
     The xla impl mirrors the oracle's formula exactly (bitwise for every
@@ -373,8 +382,10 @@ def perturb(w_tree, key, mu: float, *, impl: str = "xla",
         pert = zo_apply(w_tree, key, np.float32(-mu), impl="pallas",
                         interpret=interpret)
     else:
-        pert = jax.tree.map(
-            lambda w, d: w + mu * d.astype(w.dtype), w_tree, u)
+        # zvlint: disable=kernel-float-safety — EAGER oracle formula,
+        # mirroring zoo.perturb verbatim (see zo_apply's xla branch)
+        pert = jax.tree.map(lambda w, d: w + mu * d.astype(w.dtype),
+                            w_tree, u)
     return pert, u
 
 
@@ -387,7 +398,7 @@ def zo_gradient_from_seed(w_tree, key, coeff):
 
 
 @jax.jit
-def _apply_direction_jit(w, u, coeff, lr, z):
+def _apply_direction_jit(w, u, coeff, lr, z):   # zvlint: bit-exact
     return jax.tree.map(
         lambda a, d: (a - rounded_product(lr * coeff, d, z)).astype(a.dtype),
         w, u)

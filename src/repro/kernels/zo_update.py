@@ -33,7 +33,7 @@ def runtime_zero():
         return jnp.zeros((), jnp.uint32) + np.uint32(0)
 
 
-def rounded_product(a, b, z):
+def rounded_product(a, b, z):   # zvlint: bit-exact
     """a * b forced to round as its own f32 op.
 
     XLA's codegen contracts a multiply feeding an add/sub into one fused
@@ -51,7 +51,7 @@ def rounded_product(a, b, z):
         jax.lax.bitcast_convert_type(p, jnp.uint32) ^ z, jnp.float32)
 
 
-def rounded_quotient(a, b, z):
+def rounded_quotient(a, b, z):   # zvlint: bit-exact
     """a / b forced to compile as a true division.
 
     When ``b`` is a compile-time constant, XLA's algebraic simplifier
@@ -66,7 +66,7 @@ def rounded_quotient(a, b, z):
     return a / bz
 
 
-def _kernel(scale_ref, z_ref, w_ref, bits_ref, out_ref):
+def _kernel(scale_ref, z_ref, w_ref, bits_ref, out_ref):   # zvlint: bit-exact
     # u = +1 where bit set else -1
     u = jnp.where((bits_ref[...] & 1) == 1, 1.0, -1.0).astype(jnp.float32)
     w = w_ref[...].astype(jnp.float32)

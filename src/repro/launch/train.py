@@ -100,6 +100,11 @@ def parse_args(argv=None):
                         "clip + DP noise + codec as single dispatches; "
                         "bit-identical to the unfused seam — "
                         "docs/kernels.md)")
+    p.add_argument("--codec", default="f32",
+                   choices=["f32", "bf16", "int8"],
+                   help="vfl-zoo only: up-link payload codec for the c "
+                        "values at the exchange seam (core/exchange.py; "
+                        "int8 = symmetric per-message quantization)")
     p.add_argument("--opt-state-dtype", default="f32",
                    choices=["f32", "bf16"],
                    help="lm only: storage dtype of the Adam moments "
@@ -166,6 +171,9 @@ def parse_args(argv=None):
     if args.fused and args.mode != "vfl-zoo":
         p.error("--fused fuses the vfl-zoo release hot path "
                 "(kernels/fused_round); --mode lm has no exchange seam")
+    if args.codec != "f32" and args.mode != "vfl-zoo":
+        p.error("--codec compresses the vfl-zoo up-link payloads; "
+                "--mode lm has no exchange seam")
     if args.opt_state_dtype != "f32" and args.mode != "lm":
         p.error("--opt-state-dtype quantizes the Adam moments of the "
                 "first-order lm trainer; vfl-zoo keeps no Adam state")
@@ -221,6 +229,8 @@ def run_tcp(args, cfg, log):
                     "lr_server": args.lr / args.parties}}
     if args.fused:
         spec["vfl"]["fused"] = True
+    if args.codec != "f32":
+        spec["vfl"]["codec"] = args.codec
     if args.dp_epsilon is not None:
         # the TARGET rides the spec; run_federation calibrates the noise
         # multiplier once and ships the resolved value to every process
@@ -318,7 +328,7 @@ def main(argv=None):
     dp = make_dp(args)
     vfl = VFLConfig(num_parties=args.parties, mu=args.mu,
                     lr_party=args.lr, lr_server=args.lr / args.parties,
-                    dp=dp, fused=args.fused)
+                    dp=dp, fused=args.fused, codec=args.codec)
     if dp is not None:
         log.log(0, dp_epsilon=args.dp_epsilon,
                 dp_sigma=(dp.noise_multiplier

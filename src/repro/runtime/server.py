@@ -106,15 +106,15 @@ class RuntimeServer:
                                        channel=self.channel)
         self.core.y = jnp.asarray(prob.y)
         self._deadline = time.monotonic() + cfg.deadline_s
-        self._links: dict[int, _PartyLink] = {}
+        self._links: dict[int, _PartyLink] = {}  # guarded-by: self._links_lock
         self._links_lock = threading.Lock()
         self._inbox: dict[int, queue.Queue] = {
             m: queue.Queue() for m in range(self.q)}
         self._global_inbox: queue.Queue = queue.Queue()
-        self._processed = [0] * self.q
+        self._processed = [0] * self.q      # guarded-by: self.core.lock
         # per (party, round): (reply Message, link seq it went out on,
         # whether that send succeeded) — the at-least-once dedup cache
-        self._replies: dict[int, dict[int, tuple]] = {
+        self._replies: dict[int, dict[int, tuple]] = {  # guarded-by: self.core.lock
             m: {} for m in range(self.q)}
         self._errors: list[BaseException] = []
         self._bye = [False] * self.q
@@ -172,24 +172,28 @@ class RuntimeServer:
         step = latest_step(self.ckpt_dir)
         if step is None:
             return
-        state = {"w0": self.core.w0,
-                 "c_table": jnp.asarray(self.core.c_table)}
-        state, _ = restore_checkpoint(self.ckpt_dir, state, step)
-        self.core.w0 = state["w0"]
-        # a fresh WRITABLE copy — np.asarray over a jax buffer is a
-        # read-only view, and handle() assigns into the c table
-        self.core.c_table = np.array(state["c_table"], np.float32)
-        meta = load_metadata(self.ckpt_dir, step) or {}
-        self.core.losses.updates = int(meta.get("updates", step))
-        self._processed = [int(x) for x in
-                           meta.get("processed", [0] * self.q)]
-        for m_str, recs in (meta.get("replies") or {}).items():
-            m = int(m_str)
-            for rec in recs:
-                reply = Message.make(
-                    "loss_down", _SERVER, _party(m), int(rec["round"]),
-                    tuple(float(s) for s in rec["scalars"]))
-                self._replies[m][int(rec["rnd"])] = (reply, -1, False)
+        # restore runs from __init__ before anything listens, but the
+        # guarded state is still only ever written under its lock — one
+        # discipline, no "safe because init" special case to reason about
+        with self.core.lock:
+            state = {"w0": self.core.w0,
+                     "c_table": jnp.asarray(self.core.c_table)}
+            state, _ = restore_checkpoint(self.ckpt_dir, state, step)
+            self.core.w0 = state["w0"]
+            # a fresh WRITABLE copy — np.asarray over a jax buffer is a
+            # read-only view, and handle() assigns into the c table
+            self.core.c_table = np.array(state["c_table"], np.float32)
+            meta = load_metadata(self.ckpt_dir, step) or {}
+            self.core.losses.updates = int(meta.get("updates", step))
+            self._processed = [int(x) for x in
+                               meta.get("processed", [0] * self.q)]
+            for m_str, recs in (meta.get("replies") or {}).items():
+                m = int(m_str)
+                for rec in recs:
+                    reply = Message.make(
+                        "loss_down", _SERVER, _party(m), int(rec["round"]),
+                        tuple(float(s) for s in rec["scalars"]))
+                    self._replies[m][int(rec["rnd"])] = (reply, -1, False)
 
     def _on_disconnect(self, m: int) -> None:
         self._disconnects += 1
@@ -222,13 +226,19 @@ class RuntimeServer:
                     self._dead_bytes_in += prev.fsock.bytes_in
                     self._dead_bytes_out += prev.fsock.bytes_out
                 self._links[m] = _PartyLink(fsock, seq)
-            fsock.send_control({"type": "welcome", "party": m,
-                                "updates": self.core.losses.updates,
-                                # how far THIS party's rounds have been
-                                # processed: a resuming party whose own
-                                # checkpoint is ahead of a restored
-                                # server must rewind to this
-                                "processed": self._processed[m]})
+            # one consistent (updates, processed) cut: the dispatcher
+            # advances both inside _process's critical section, and a
+            # welcome straddling that advance would tell a resuming party
+            # to rewind to a round the server has already answered
+            with self.core.lock:
+                welcome = {"type": "welcome", "party": m,
+                           "updates": self.core.losses.updates,
+                           # how far THIS party's rounds have been
+                           # processed: a resuming party whose own
+                           # checkpoint is ahead of a restored
+                           # server must rewind to this
+                           "processed": self._processed[m]}
+            fsock.send_control(welcome)
             self._receive_loop(m, fsock, seq)
         except (TransportError, OSError) as e:
             self._errors.append(e)
@@ -268,6 +278,8 @@ class RuntimeServer:
                 self._global_inbox.put((m,) + item)
 
     # -- dispatch ----------------------------------------------------------
+    # zvlint: disable=lock-discipline — failure-path read of _processed
+    # for the exception message only
     def _check(self) -> None:
         if time.monotonic() > self._deadline:
             raise FederationError(
@@ -283,23 +295,29 @@ class RuntimeServer:
         """A replayed round from a rejoined party: answer from the cache
         without touching server state — unless the reply already went out
         on the party's CURRENT link (then a resend would double-deliver)."""
-        if rnd not in self._replies[m]:
-            raise FederationError(
-                f"party {m} replayed round {rnd} but its reply is not in "
-                f"the cache (processed={self._processed[m]}) — the server "
-                f"state has advanced past it and cannot answer losslessly")
-        reply, sent_seq, sent_ok = self._replies[m][rnd]
+        # the dispatcher calls this, but _process (same thread) grows and
+        # PRUNES the cache under the core lock while snapshot readers
+        # iterate it — reads take the lock too so the membership test and
+        # the lookup see one cache state
+        with self.core.lock:
+            if rnd not in self._replies[m]:
+                raise FederationError(
+                    f"party {m} replayed round {rnd} but its reply is not "
+                    f"in the cache (processed={self._processed[m]}) — the "
+                    "server state has advanced past it and cannot answer "
+                    "losslessly")
+            reply, sent_seq, sent_ok = self._replies[m][rnd]
         link = self._current_link(m)
         if link is None or (sent_ok and sent_seq == link.seq):
             return
         try:
-            link.fsock.send_message(reply)
-            self._replies[m][rnd] = (reply, link.seq, True)
+            link.fsock.send_message(reply)    # send outside the lock
+            with self.core.lock:
+                self._replies[m][rnd] = (reply, link.seq, True)
         except (TransportError, OSError):
             pass                             # it will be replayed again
 
     def _process(self, m: int, msg_c, msg_hats) -> None:
-        rnd = self._processed[m]
         # observe the up-link through the server's channel stack at
         # processing time: transcript/counter order equals the schedule
         # order, and replayed duplicates are never double-counted
@@ -311,6 +329,7 @@ class RuntimeServer:
         # persist updates/w0 advanced past processed/the reply cache —
         # that torn cut would double-apply a round on resume
         with self.core.lock:
+            rnd = self._processed[m]
             down = self.core.handle(msg_c, msg_hats)  # accounts loss_down
             link = self._current_link(m)
             self._replies[m][rnd] = (down, link.seq if link else -1,
@@ -334,10 +353,11 @@ class RuntimeServer:
         # federation (no disconnect event ever fires) can lose; a
         # resuming party ahead of the restored server rewinds to the
         # server's processed count (see party._pick_resume_round)
-        if (self.ckpt_dir is not None
-                and sum(self._processed) % (self.q * self.cfg.ckpt_every)
-                == 0):
-            self._snapshot("cadence")
+        if self.ckpt_dir is not None:
+            with self.core.lock:
+                done = sum(self._processed)
+            if done % (self.q * self.cfg.ckpt_every) == 0:
+                self._snapshot("cadence")
 
     def _pop(self, inbox: queue.Queue):
         while True:
@@ -349,6 +369,9 @@ class RuntimeServer:
             except queue.Empty:
                 continue
 
+    # zvlint: disable=lock-discipline — the dispatcher thread is the SOLE
+    # writer of _processed, so its own unlocked reads cannot tear; every
+    # cross-thread reader (_snapshot, _handshake) takes the core lock
     def _dispatch_serial(self) -> None:
         for g in range(self.rounds):
             for m in range(self.q):
@@ -369,6 +392,9 @@ class RuntimeServer:
                     break
                 self._process(m, msg_c, hats)
 
+    # zvlint: disable=lock-discipline — dispatcher-only reads of
+    # _processed (see _dispatch_serial); mutation happens in _process
+    # under the core lock
     def _dispatch_arrival(self) -> None:
         """Arrival order, bounded by the paper's tau (Assumption 4) when
         ``cfg.max_staleness`` is set: a round that would race more than
@@ -451,7 +477,12 @@ class RuntimeServer:
             for link in links:
                 link.fsock.close()
 
-        res = self.core.losses
+        # the dispatcher has returned, but receiver threads for unclean
+        # parties may still be alive — take one last consistent cut
+        with self.core.lock:
+            res = self.core.losses
+            processed = list(self._processed)
+            w0 = {k: np.asarray(v) for k, v in self.core.w0.items()}
         bytes_by_kind = dict(self.channel.bytes_by_kind)
         transcript = getattr(self.channel, "transcript", None)
         return {
@@ -467,8 +498,8 @@ class RuntimeServer:
             "disconnects": self._disconnects,
             "parked": self._parked_events,
             "staleness_max": self._staleness_max,
-            "processed": list(self._processed),
-            "w0": {k: np.asarray(v) for k, v in self.core.w0.items()},
+            "processed": processed,
+            "w0": w0,
             "socket_bytes_in": self._dead_bytes_in + sum(
                 link.fsock.bytes_in for link in links),
             "socket_bytes_out": self._dead_bytes_out + sum(

@@ -1,0 +1,9 @@
+"""Fixture (flagged): a config class whose fields drifted from the CLI."""
+from dataclasses import dataclass
+
+
+@dataclass
+class DPConfig:
+    epsilon: float = 1.0          # flag: --dp-epsilon
+    clip: float = 1.0             # flag: --dp-clamp — annotation drifted
+    mechanism: str = "gaussian"

@@ -1,0 +1,9 @@
+"""Fixture (flagged): a defense flag no DPConfig field claims."""
+import argparse
+
+
+def parse(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dp-epsilon", type=float)
+    p.add_argument("--dp-sigma", type=float)   # sets nothing: silent no-op
+    return p.parse_args(argv)

@@ -1,0 +1,9 @@
+"""Fixture (clean): every field reachable or declared internal."""
+from dataclasses import dataclass
+
+
+@dataclass
+class DPConfig:
+    epsilon: float = 1.0          # flag: --dp-epsilon
+    clip: float = 1.0             # flag: --dp-clip
+    mechanism: str = "gaussian"   # internal-only: set by the accountant

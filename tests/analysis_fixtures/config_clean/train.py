@@ -1,0 +1,9 @@
+"""Fixture (clean): both flags map onto DPConfig fields."""
+import argparse
+
+
+def parse(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dp-epsilon", type=float)
+    p.add_argument("--dp-clip", type=float)
+    return p.parse_args(argv)

@@ -1,0 +1,29 @@
+"""Fixture (flagged): the PR-2 rng hazards, in their original shapes.
+
+Never imported — analyzed by tests/test_analysis.py. Lives under a
+``core/`` path segment so rng-discipline is in scope.
+"""
+import time
+
+import jax
+import numpy as np
+
+
+class Trainer:
+    def __init__(self, seed, updates):
+        self.seed = seed
+        self.updates = updates
+
+    def perturb_key(self):
+        # the PR-2 seed-blind stream: keyed off the update counter, so
+        # two runs with the same seed but different schedules correlate
+        return jax.random.PRNGKey(self.updates)
+
+    def party_stream(self, m):
+        # the PR-2 ad-hoc derivation: an inline formula a second call
+        # site can (and did) spell differently
+        return np.random.default_rng(self.seed * 97 + m)
+
+    def stamp(self):
+        # wall-clock feeding state makes the transcript non-replayable
+        return time.time()

@@ -1,0 +1,24 @@
+"""Fixture (clean): the same derivations through the approved helpers."""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.async_host import party_rng_seed
+from repro.utils.prng import fold_name
+
+
+class Trainer:
+    def __init__(self, seed):
+        self.seed = seed
+
+    def perturb_key(self, rnd):
+        return fold_name(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), rnd),
+            "perturb")
+
+    def party_stream(self, m):
+        return np.random.default_rng(party_rng_seed(self.seed, m))
+
+    def elapsed(self, t0):
+        return time.perf_counter() - t0

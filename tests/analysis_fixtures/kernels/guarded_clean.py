@@ -1,0 +1,12 @@
+"""Fixture (clean): the same math pinned through the rounding guards."""
+import jax.numpy as jnp
+
+from repro.kernels.zo_update import rounded_product, rounded_quotient
+
+
+def zo_step(w, u, scale, z):   # zvlint: bit-exact
+    return w - rounded_product(scale, u, z)
+
+
+def quantize(d, amax, z):   # zvlint: bit-exact
+    return jnp.round(d / rounded_quotient(amax, 127.0, z))

@@ -1,0 +1,14 @@
+"""Fixture (flagged): the PR-6 drift — unguarded math in a function
+whose output is pinned bitwise against the eager oracle."""
+import jax.numpy as jnp
+
+
+def zo_step(w, u, scale):   # zvlint: bit-exact
+    # XLA contracts the multiply into an FMA: one rounding where the
+    # eager oracle rounds twice — 1 ulp off, data-dependently
+    return w - scale * u
+
+
+def quantize(d, amax):   # zvlint: bit-exact
+    # division by a constant rewrites to multiply-by-reciprocal
+    return jnp.round(d / (amax / 127.0))

@@ -1,0 +1,17 @@
+"""Fixture (flagged): the PR-2 budget race — check-then-act, no lock."""
+import threading
+
+
+class _Server:
+    def __init__(self, budget):
+        self.lock = threading.RLock()
+        self.budget = budget
+        self.claimed = 0          # guarded-by: self.lock
+
+    def try_claim(self):
+        # two racers both pass the check and both increment: the step
+        # budget over-commits — exactly the shipped PR-2 bug
+        if self.claimed < self.budget:
+            self.claimed += 1
+            return True
+        return False

@@ -1,0 +1,26 @@
+"""Fixture (clean): the same shapes with the lock actually held."""
+import threading
+
+
+class _Server:
+    def __init__(self, budget):
+        self.lock = threading.RLock()
+        self.budget = budget
+        self.claimed = 0          # guarded-by: self.lock
+
+    def try_claim(self):
+        with self.lock:
+            if self.claimed < self.budget:
+                self.claimed += 1
+                return True
+            return False
+
+
+class Checkpointer:
+    def __init__(self, core):
+        self.core = core
+
+    def snapshot(self):
+        # one critical section -> a consistent (w0, replies) cut
+        with self.core.lock:
+            return dict(self.core.w0), dict(self.core.replies)

@@ -1,0 +1,22 @@
+"""Fixture (flagged): the PR-4 torn snapshot — two unlocked reads of
+guarded state through a foreign ``.core`` handle."""
+import threading
+
+
+class Core:
+    def __init__(self, w0):
+        self.lock = threading.RLock()
+        self.w0 = w0              # guarded-by: self.lock
+        self.replies = {}         # guarded-by: self.lock
+
+
+class Checkpointer:
+    def __init__(self, core):
+        self.core = core
+
+    def snapshot(self):
+        # the dispatcher can mutate between these two reads: the
+        # checkpoint pairs a new w0 with stale replies (or vice versa)
+        w0 = dict(self.core.w0)
+        replies = dict(self.core.replies)
+        return w0, replies

@@ -1,0 +1,14 @@
+"""Fixture (flagged): a message kind invented at the call site."""
+
+
+class Message:
+    @staticmethod
+    def make(kind, payload):
+        return (kind, payload)
+
+
+def leak(payload):
+    # 'grad_up' is not registered in wire.KINDS: the codec cannot
+    # version it, the accountant cannot price it, and the privacy
+    # audit never sees the traffic
+    return Message.make("grad_up", payload)

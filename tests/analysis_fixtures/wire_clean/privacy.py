@@ -1,0 +1,5 @@
+"""Fixture threat model: what an adversary observes, per wire kind."""
+EXPOSURE = {
+    "c_up": "scalar party outputs (the Theorem 1 black-box surface)",
+    "loss_down": "the global loss scalar",
+}

@@ -1,0 +1,15 @@
+"""Fixture (clean): every call-site kind is registered in wire.KINDS."""
+
+
+class Message:
+    @staticmethod
+    def make(kind, payload):
+        return (kind, payload)
+
+
+def upload(payload):
+    return Message.make("c_up", payload)
+
+
+def reply(payload):
+    return Message.make("loss_down", payload)

@@ -1,0 +1,4 @@
+"""Fixture wire layer: the closed kind set the transport enumerates."""
+KINDS = ("c_up", "loss_down")
+UP_KINDS = ("c_up",)
+DOWN_KINDS = ("loss_down",)

@@ -1,0 +1,183 @@
+"""zvlint end-to-end: every rule catches the fixture carrying its
+historical bug shape, the fixed twin passes, the repo itself is clean
+against the (empty) committed baseline, and the suppression / baseline
+mechanics behave.
+
+The fixtures under tests/analysis_fixtures/ are analyzed, never
+imported — see their README.md for the bug-to-directory map.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze
+from repro.analysis.baseline import Baseline
+from repro.analysis.cli import main as zvlint_main
+from repro.core.async_host import party_rng_seed
+
+FIX = Path(__file__).resolve().parent / "analysis_fixtures"
+ROOT = FIX.parent.parent
+
+
+def _for(report, basename):
+    return [f for f in report.findings if Path(f.path).name == basename]
+
+
+# --------------------------------------------------- rule x fixture -------
+
+def test_rng_flags_pr2_shapes_and_clean_twin_passes():
+    rep = analyze([FIX / "core"], select=["rng-discipline"])
+    bad = _for(rep, "seed_blind.py")
+    msgs = " | ".join(f.message for f in bad)
+    assert "not a seed" in msgs            # PRNGKey(self.updates)
+    assert "ad-hoc seed arithmetic" in msgs  # self.seed * 97 + m
+    assert "wall-clock" in msgs            # time.time()
+    assert len(bad) == 3
+    assert _for(rep, "seed_clean.py") == []
+
+
+def test_lock_flags_budget_race_and_torn_snapshot():
+    rep = analyze([FIX / "locks"], select=["lock-discipline"])
+    race = _for(rep, "budget_race.py")
+    # the unlocked read in the compare and the unlocked increment
+    assert len(race) >= 2
+    assert all("guarded-by" in f.message for f in race)
+    torn = _for(rep, "torn_snapshot.py")
+    # both halves of the torn pair, each read through the .core handle
+    assert {f.line for f in torn} == {20, 21}
+    assert _for(rep, "locked_clean.py") == []
+
+
+def test_kernel_flags_pr6_rewrites_and_guarded_twin_passes():
+    rep = analyze([FIX / "kernels"], select=["kernel-float-safety"])
+    bad = _for(rep, "unguarded_fma.py")
+    msgs = " | ".join(f.message for f in bad)
+    assert "FMA" in msgs and "reciprocal" in msgs
+    assert len(bad) == 2
+    assert _for(rep, "guarded_clean.py") == []
+
+
+def test_wire_flags_unregistered_kind_and_clean_twin_passes():
+    rep = analyze([FIX / "wire_bad"], select=["wire-closure"])
+    assert len(rep.findings) == 1
+    assert "'grad_up'" in rep.findings[0].message
+    clean = analyze([FIX / "wire_clean"], select=["wire-closure"])
+    assert clean.findings == []
+
+
+def test_config_flags_drift_orphan_and_noop_flag():
+    rep = analyze([FIX / "config_bad"], select=["config-coherence"])
+    msgs = " | ".join(f.message for f in rep.findings)
+    assert "drifted" in msgs               # clip annotated --dp-clamp
+    assert "no reachable train.py flag" in msgs  # mechanism, unannotated
+    assert "--dp-sigma" in msgs            # reverse: flag sets nothing
+    assert len(rep.findings) == 3
+    clean = analyze([FIX / "config_clean"], select=["config-coherence"])
+    assert clean.findings == []
+
+
+# ----------------------------------------------- repo-clean CI gate -------
+
+def test_repo_src_is_clean_against_committed_baseline():
+    rep = analyze([ROOT / "src" / "repro"])
+    bl = Baseline.load(ROOT / "zvlint_baseline.json")
+    new, _ = bl.split(rep.findings, rep.line_text)
+    assert new == [], "\n".join(
+        f"{f.path}:{f.line}: [{f.rule}] {f.message}" for f in new)
+
+
+def test_baseline_carries_no_debt_on_the_server_cores():
+    # ISSUE acceptance: the guarded-by sweep over _Server/RuntimeServer
+    # was FIXED or justified inline, never grandfathered
+    bl = Baseline.load(ROOT / "zvlint_baseline.json")
+    assert not any("async_host" in p or "runtime/server" in p
+                   for (_, p, _) in bl.entries)
+
+
+# ------------------------------------------ suppression / baseline --------
+
+BAD_KERNEL = ("def f(a, b, c):   # zvlint: bit-exact\n"
+              "    return a * b + c\n")
+
+
+def test_inline_suppression_counts_not_fails(tmp_path):
+    p = tmp_path / "k.py"
+    p.write_text(BAD_KERNEL)
+    rep = analyze([p], select=["kernel-float-safety"])
+    assert len(rep.findings) == 1 and rep.n_suppressed == 0
+
+    p.write_text("def f(a, b, c):   # zvlint: bit-exact\n"
+                 "    # zvlint: disable=kernel-float-safety — fixture\n"
+                 "    return a * b + c\n")
+    rep = analyze([p], select=["kernel-float-safety"])
+    assert rep.findings == [] and rep.n_suppressed == 1
+
+
+def test_def_line_suppression_covers_the_body(tmp_path):
+    p = tmp_path / "k.py"
+    p.write_text("# zvlint: disable=kernel-float-safety — whole fn\n"
+                 "def f(a, b, c):   # zvlint: bit-exact\n"
+                 "    return a * b + c\n")
+    rep = analyze([p], select=["kernel-float-safety"])
+    assert rep.findings == [] and rep.n_suppressed == 1
+
+
+def test_baseline_absorbs_exactly_its_count(tmp_path):
+    p = tmp_path / "k.py"
+    p.write_text(BAD_KERNEL)
+    rep = analyze([p], select=["kernel-float-safety"])
+    bl = Baseline.from_findings(rep.findings, rep.line_text)
+    new, old = bl.split(rep.findings, rep.line_text)
+    assert new == [] and len(old) == 1
+    # a SECOND identical line exceeds the entry's count -> new finding
+    p.write_text(BAD_KERNEL + "\n\ndef g(a, b, c):   # zvlint: bit-exact\n"
+                 "    return a * b + c\n")
+    rep2 = analyze([p], select=["kernel-float-safety"])
+    new2, old2 = bl.split(rep2.findings, rep2.line_text)
+    assert len(new2) == 1 and len(old2) == 1
+    # line-number moves do NOT invalidate entries (text-keyed)
+    p.write_text("\n\n" + BAD_KERNEL)
+    rep3 = analyze([p], select=["kernel-float-safety"])
+    new3, _ = bl.split(rep3.findings, rep3.line_text)
+    assert new3 == []
+
+
+def test_baseline_roundtrip(tmp_path):
+    p = tmp_path / "k.py"
+    p.write_text(BAD_KERNEL)
+    rep = analyze([p], select=["kernel-float-safety"])
+    blpath = tmp_path / "bl.json"
+    Baseline.from_findings(rep.findings, rep.line_text).dump(blpath)
+    new, old = Baseline.load(blpath).split(rep.findings, rep.line_text)
+    assert new == [] and len(old) == 1
+
+
+# ----------------------------------------------------------- CLI ----------
+
+def test_cli_exit_codes_and_github_format(capsys):
+    rc = zvlint_main([str(FIX / "kernels" / "unguarded_fma.py"),
+                      "--format", "github", "--no-baseline",
+                      "--select", "kernel-float-safety"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert out.count("::error file=") == 2
+    rc = zvlint_main([str(FIX / "kernels" / "guarded_clean.py"),
+                      "--no-baseline", "--select", "kernel-float-safety"])
+    assert rc == 0
+
+
+def test_cli_rejects_unknown_rule():
+    with pytest.raises(SystemExit):
+        zvlint_main(["--select", "no-such-rule", "src"])
+
+
+# ------------------------------------- satellite: tig derivation fix ------
+
+def test_party_rng_seed_matches_the_historical_inline_formula():
+    """core/tig.py used to inline `self.seed * 97 + m`; it now routes
+    through party_rng_seed. The helper IS that formula, so every
+    np.random.default_rng stream — and therefore every recorded TIG
+    trajectory — is unchanged by the refactor."""
+    for seed in (0, 1, 7, 123, 2**31 - 5):
+        for m in range(12):
+            assert party_rng_seed(seed, m) == seed * 97 + m
