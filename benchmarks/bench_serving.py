@@ -1,0 +1,185 @@
+"""Serving bench: batch every user onto ONE wire crossing per party per
+step (serving/federated.py, docs/serving.md).
+
+Rows:
+  * serving_{lan,wan,straggler}_B{1,8,32}   requests/sec and p50/p99
+      per-request latency on the priced NetworkChannel profile — the
+      virtual wire clock, so the numbers isolate the protocol cost
+      (per-message latency x crossings), not host speed
+  * serving_wan_amortization   the headline: B=32 vs B=1 requests/sec
+      under the wan profile (acceptance: >= 8x)
+  * serving_bytes_{f32,bf16,int8}   measured wire bytes per prediction
+      vs the analytic per-kind formula (comms.serving_round_by_kind) —
+      the row RAISES on drift, the artifact records the match
+  * serving_parity   batched (B=32, mid-stream admission) predictions
+      bitwise equal to the sequential B=1 engine — the per-sample
+      jitted forward makes this hold by construction
+  * serving_answer_cache   repeated users: LRU hit rate and the wire
+      bytes it saves vs the cache-disabled run
+  * serving_admission_reset   the engine satellite fix: one fused
+      mask-based cache reset per admission wave vs the legacy eager
+      per-request rebuild, on a real reduced-arch serving cache
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import NETWORK_PROFILES
+from repro.core.comms import serving_bytes_per_prediction
+from repro.core.wire import NetworkChannel
+from repro.runtime.problem import build_problem
+from repro.serving.federated import FederatedServingEngine, ServeRequest
+
+SPEC = {"kind": "lr", "parties": 4, "features": 32, "samples": 256,
+        "batch": 8, "seed": 0, "vfl": {"mu": 1e-3}}
+REQUESTS = 64
+
+
+def _party_params(prob):
+    """Random nonzero blocks — zero-init LR would serve all-zero
+    predictions and make every parity row vacuous."""
+    import jax
+    q = prob.model.num_parties
+    keys = jax.random.split(jax.random.key(7), q)
+    return [{"w": jax.random.normal(keys[m], (prob.model.pad,))}
+            for m in range(q)]
+
+
+def _serve(slots, profile=None, codec="f32", cache=2048, ids=None):
+    spec = dict(SPEC)
+    spec["vfl"] = dict(SPEC["vfl"])
+    if codec != "f32":
+        spec["vfl"]["codec"] = codec
+    prob = build_problem(spec)
+    ch = (NetworkChannel(NETWORK_PROFILES[profile], seed=0)
+          if profile else None)
+    eng = FederatedServingEngine.from_problem(
+        prob, channel=ch, slots=slots, cache_entries=cache,
+        party_params=_party_params(prob))
+    if ids is None:
+        ids = np.random.default_rng(1).integers(0, spec["samples"], REQUESTS)
+    t0 = time.perf_counter()
+    for i, sid in enumerate(ids):
+        eng.submit(ServeRequest(rid=i, sample_id=int(sid)))
+    eng.run()
+    wall = time.perf_counter() - t0
+    eng.validate_wire()          # measured == analytic, every run
+    return eng, wall
+
+
+def _preds(eng):
+    return {r.rid: r.prediction for r in eng.completed}
+
+
+def _admission_row():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.engine import _reset_slots
+
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    slots = 8
+    cache = model.init_cache(params, slots, 128)
+    mask = jnp.ones(slots, bool)
+
+    def legacy():
+        c = cache
+        for s in range(slots):        # the pre-fix path: one eager
+            c = jax.tree.map(         # whole-cache rebuild per request
+                lambda a, s=s: a.at[:, s].set(jnp.zeros_like(a[:, s]))
+                if a.ndim >= 2 else a, c)
+        jax.block_until_ready(c)
+
+    def fused():
+        jax.block_until_ready(_reset_slots(cache, mask))
+
+    def clock(fn, reps=20):
+        fn()                          # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn()
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    us_legacy, us_fused = clock(legacy), clock(fused)
+    return ("serving_admission_reset", us_fused,
+            f"slots={slots};us_legacy_per_wave={us_legacy:.1f};"
+            f"us_fused_per_wave={us_fused:.1f};"
+            f"speedup={us_legacy / us_fused:.1f}")
+
+
+def run():
+    rows = []
+    q = SPEC["parties"]
+
+    # --- rps / latency frontier: B x profile ----------------------------
+    rps = {}
+    for profile in ("lan", "wan", "straggler"):
+        for B in (1, 8, 32):
+            eng, wall = _serve(slots=B, profile=profile, cache=0)
+            m = eng.metrics()
+            rps[(profile, B)] = m["requests_per_s"]
+            rows.append((
+                f"serving_{profile}_B{B}", wall / m["served"] * 1e6,
+                f"B={B};requests={m['served']};steps={m['steps']};"
+                f"rps={m['requests_per_s']:.1f};wire_s={m['wire_s']:.4f};"
+                f"p50_s={m['p50_s']:.4f};p99_s={m['p99_s']:.4f};"
+                f"bytes_per_prediction={m['bytes_per_prediction']:.2f}"))
+
+    speedup = rps[("wan", 32)] / rps[("wan", 1)]
+    assert speedup >= 8.0, (
+        f"wan B=32 amortization {speedup:.1f}x < the 8x acceptance bar")
+    rows.append(("serving_wan_amortization", 0.0,
+                 f"rps_B1={rps[('wan', 1)]:.1f};"
+                 f"rps_B32={rps[('wan', 32)]:.1f};"
+                 f"speedup={speedup:.1f};accept_min=8.0"))
+
+    # --- wire bytes per prediction vs the analytic formula --------------
+    # distinct ids + disabled cache + requests divisible by slots: every
+    # step is a FULL batch, so bytes/prediction equals the closed form
+    full_ids = np.arange(REQUESTS)
+    for codec in ("f32", "bf16", "int8"):
+        eng, _ = _serve(slots=8, codec=codec, cache=0, ids=full_ids)
+        measured = eng.metrics()["bytes_per_prediction"]
+        analytic = serving_bytes_per_prediction(8, q, codec)
+        assert abs(measured - analytic) < 1e-9, (codec, measured, analytic)
+        rows.append((f"serving_bytes_{codec}", 0.0,
+                     f"B=8;parties={q};measured_B_per_pred={measured:.4f};"
+                     f"analytic_B_per_pred={analytic:.4f};match=True"))
+
+    # --- bitwise parity: batched vs sequential --------------------------
+    # 64 requests through 32 slots = two admission waves (mid-stream
+    # admission included) vs the strict one-at-a-time engine
+    ids = np.random.default_rng(1).integers(0, SPEC["samples"], REQUESTS)
+    eng_b, _ = _serve(slots=32, ids=ids)
+    eng_1, _ = _serve(slots=1, ids=ids)
+    bitwise = _preds(eng_b) == _preds(eng_1)
+    assert bitwise, "batched serving diverged from the B=1 reference"
+    rows.append(("serving_parity", 0.0,
+                 f"requests={REQUESTS};slots=32;"
+                 f"batched_vs_sequential_bitwise={bitwise}"))
+
+    # --- answer cache ---------------------------------------------------
+    hot = np.tile(np.arange(8), 8)           # 8 users, 8 visits each
+    eng_c, _ = _serve(slots=8, profile="wan", cache=2048, ids=hot)
+    eng_n, _ = _serve(slots=8, profile="wan", cache=0, ids=hot)
+    mc, mn = eng_c.metrics(), eng_n.metrics()
+    hit_rate = mc["cache_hits"] / (mc["cache_hits"] + mc["cache_misses"])
+    assert _preds(eng_c) == _preds(eng_n), "cache changed predictions"
+    rows.append(("serving_answer_cache", 0.0,
+                 f"requests={len(hot)};hit_rate={hit_rate:.3f};"
+                 f"wire_bytes_cached={mc['wire_bytes']};"
+                 f"wire_bytes_uncached={mn['wire_bytes']};"
+                 f"bytes_saved_ratio="
+                 f"{1 - mc['wire_bytes'] / mn['wire_bytes']:.3f};"
+                 f"rps_cached={mc['requests_per_s']:.1f};"
+                 f"rps_uncached={mn['requests_per_s']:.1f}"))
+
+    # --- engine satellite: fused admission reset ------------------------
+    rows.append(_admission_row())
+    return rows

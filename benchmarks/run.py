@@ -39,6 +39,10 @@ SUITES = {
     "dp": ("benchmarks.bench_dp",
            "DP defense: measured privacy/utility frontier vs epsilon",
            "dp"),
+    "serving": ("benchmarks.bench_serving",
+                "Federated inference serving: one wire crossing per party "
+                "per step",
+                "serving"),
 }
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

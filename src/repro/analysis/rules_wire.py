@@ -12,9 +12,10 @@ never sees. This rule closes the loop statically:
   * closure — every string literal used in a kind position anywhere
     (first arg of ``Message.make``, any ``kind=`` keyword, comparisons
     against a ``.kind`` attribute), plus any ``*_up``/``*_down``
-    literal inside the four wire-adjacent modules (``wire.py``,
-    ``transport.py``, ``privacy.py``, ``comms.py``), must be a member
-    of ``KINDS``;
+    literal inside the wire-adjacent modules (``wire.py``,
+    ``transport.py``, ``privacy.py``, ``comms.py``, and the serving
+    round's endpoints ``federated.py``/``serving.py``), must be a
+    member of ``KINDS``;
   * partition — ``UP_KINDS`` and ``DOWN_KINDS`` must partition
     ``KINDS`` exactly (the exposure model is directional);
   * threat-model coverage — every kind must appear in ``privacy.py``,
@@ -33,7 +34,8 @@ from pathlib import Path
 from repro.analysis.core import Finding, Rule, register
 
 KIND_RE = re.compile(r"^[a-z][a-z0-9]*(?:_[a-z0-9]+)*_(?:up|down)$")
-_LITERAL_SCAN_FILES = {"wire.py", "transport.py", "privacy.py", "comms.py"}
+_LITERAL_SCAN_FILES = {"wire.py", "transport.py", "privacy.py", "comms.py",
+                       "federated.py", "serving.py"}
 
 
 def _str_tuple(node) -> tuple[str, ...] | None:

@@ -7,8 +7,9 @@ from __future__ import annotations
 
 from repro.configs.base import (INPUT_SHAPES, NETWORK_PROFILES, DPConfig,
                                 MeshConfig, ModelConfig, MoEConfig,
-                                NetworkConfig, RuntimeConfig, ShapeConfig,
-                                SSMConfig, TrainConfig, VFLConfig)
+                                NetworkConfig, RuntimeConfig, ServingConfig,
+                                ShapeConfig, SSMConfig, TrainConfig,
+                                VFLConfig)
 from repro.configs import (chameleon_34b, deepseek_7b, hymba_15b, minicpm_2b,
                            phi35_moe_42b, qwen15_05b, qwen3_moe_30b,
                            rwkv6_16b, whisper_small, yi_34b)
@@ -33,4 +34,5 @@ def get_config(name: str, reduced: bool = False) -> ModelConfig:
 __all__ = ["ARCH_IDS", "get_config", "ModelConfig", "MoEConfig", "SSMConfig",
            "ShapeConfig", "TrainConfig", "MeshConfig", "VFLConfig",
            "NetworkConfig", "NETWORK_PROFILES", "INPUT_SHAPES",
-           "RuntimeConfig", "DPConfig", "PaperLRConfig", "PaperFCNConfig"]
+           "RuntimeConfig", "ServingConfig", "DPConfig", "PaperLRConfig",
+           "PaperFCNConfig"]

@@ -369,6 +369,24 @@ class RuntimeConfig:
 
 
 @dataclass(frozen=True)
+class ServingConfig:
+    """Knobs of the federated inference front end (serving/federated.py).
+
+    One engine step serves every occupied slot with ONE ``serve_down``
+    query per party and one batched ``c_up`` answer back — per-message
+    latency and codec overhead amortize over ``slots`` concurrent
+    requests (benchmarks/bench_serving.py measures the frontier).
+    """
+    requests: int = 0             # flag: --serve — how many inference
+    #                               requests to serve (0 = serving off)
+    slots: int = 8                # flag: --serve-batch — concurrent
+    #                               request slots = max wire batch B
+    cache_entries: int = 2048     # flag: --serve-cache — per-party LRU
+    #                               answer-cache capacity, keyed
+    #                               (sample id, params version)
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     batch_size: int = 8
     seq_len: int = 128

@@ -110,6 +110,44 @@ def validate_measured(measured: RoundComms, batch: int, c_dim: int = 1,
     return analytic
 
 
+def serving_round_by_kind(batch: int, parties: int, codec: str = "f32",
+                          c_dim: int = 1) -> dict:
+    """One federated INFERENCE round over a batch of B samples
+    (serving/federated.py): the server sends every party the int32
+    sample-id vector as one ``serve_down`` (4 bytes per id), and each
+    party answers with ONE batched ``c_up`` carrying its B c values
+    through the up-link codec. The O(B) amortization the serving bench
+    measures is visible right here: per-message codec overhead and
+    per-message channel latency are paid q times per STEP, not q times
+    per prediction."""
+    per_up = batch * c_dim * CODEC_VALUE_BYTES[codec] \
+        + CODEC_MSG_OVERHEAD[codec]
+    return {"serve_down": parties * batch * 4, "c_up": parties * per_up}
+
+
+def serving_bytes_per_prediction(batch: int, parties: int,
+                                 codec: str = "f32",
+                                 c_dim: int = 1) -> float:
+    """Analytic wire bytes per served prediction at batch size B."""
+    by = serving_round_by_kind(batch, parties, codec, c_dim)
+    return sum(by.values()) / batch
+
+
+def validate_serving_channel(channel, expected: dict) -> dict:
+    """Check a serving channel's MEASURED per-kind byte counters against
+    the analytic expectation (a dict accumulated from
+    ``serving_round_by_kind`` — the engine tracks it per crossing, so the
+    formula stays exact under answer-cache hits and partial batches).
+    Returns the expectation or raises with both sides — the same audited
+    loop ``validate_channel`` closes for training."""
+    measured = {k: channel.bytes_by_kind.get(k, 0) for k in expected}
+    if measured != expected:
+        raise AssertionError(
+            f"serving wire drift: measured {measured} != analytic "
+            f"{expected}")
+    return expected
+
+
 def tig_round(batch: int, c_dim: int = 1) -> RoundComms:
     return RoundComms(batch * c_dim * FLOAT, batch * c_dim * FLOAT)
 

@@ -322,6 +322,34 @@ def replay_backdoor_attack(transcript: Transcript, lr: float, mu: float,
             "cos_to_target": cos, "deviation_norm": dev}
 
 
+# ----------------------------------------------------------------- serving -
+
+def serving_exposure_from_transcript(transcript: Transcript) -> dict:
+    """Threat-model coverage of the federated INFERENCE round
+    (serving/federated.py): what a recorded serving transcript exposes.
+
+    The server->party ``serve_down`` query carries only int32 sample ids
+    — the entity alignment every VFL round already presumes both
+    endpoints share (the same class of protocol context as the ``idx``
+    meta on training uploads), never features, labels, or model state.
+    The party's batched answer is an ordinary ``c_up``, so a curious
+    adversary at the seam observes exactly the upload class the attacks
+    above already read: ``label_inference_from_uploads`` runs UNCHANGED
+    on a serving transcript (its per-sample c values are partial logits
+    of the served predictions), and the feature-inference counting of
+    ``feature_inference_from_transcript`` applies as-is. No gradient,
+    parameter, or label ever rides the serving round."""
+    kinds = transcript.kinds()
+    return {
+        "serve_query_ids": "serve_down" in kinds,
+        "function_values": "c_up" in kinds,
+        "intermediate_grads": "grad_down" in kinds,    # never in serving
+        "model_params": "param_down" in kinds,         # never in serving
+        "messages": {k: len(transcript.filter(kind=k).messages)
+                     for k in sorted(kinds)},
+    }
+
+
 # ---------------------------------------------------------------- exposure -
 
 def exposure_from_transcript(transcript: Transcript) -> dict:

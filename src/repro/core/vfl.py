@@ -103,6 +103,12 @@ class VFLModel:
         """F_0: list/stack of c_m + labels -> scalar loss (no reg)."""
         raise NotImplementedError
 
+    def server_predict(self, w0, cs):
+        """F_0's decision from a received c table (B, q) — no labels, no
+        party data: the inference-serving reduce (serving/federated.py).
+        ``predict`` composes party forwards with this."""
+        raise NotImplementedError
+
     def regularizer(self, w_m):
         return jnp.zeros((), jnp.float32)
 
@@ -182,9 +188,11 @@ class PaperLRModel(VFLModel):
     def regularizer(self, w_m):
         return nonconvex_reg(w_m)
 
-    def predict(self, w0, stacked_w, x):
-        cs = self.all_party_outputs(stacked_w, x)
+    def server_predict(self, w0, cs):
         return jnp.sign(jnp.sum(cs, axis=1) + w0["b"])
+
+    def predict(self, w0, stacked_w, x):
+        return self.server_predict(w0, self.all_party_outputs(stacked_w, x))
 
 
 # ----------------------------------------------------------------- FCN -----
@@ -220,9 +228,11 @@ class PaperFCNModel(VFLModel):
         logits = cs @ w0["w"] + w0["b"]                # (B, classes)
         return cross_entropy_loss(logits, y)
 
-    def predict(self, w0, stacked_w, x):
-        cs = self.all_party_outputs(stacked_w, x)
+    def server_predict(self, w0, cs):
         return jnp.argmax(cs @ w0["w"] + w0["b"], axis=-1)
+
+    def predict(self, w0, stacked_w, x):
+        return self.server_predict(w0, self.all_party_outputs(stacked_w, x))
 
 
 # --------------------------------------------------------- Transformer -----

@@ -29,6 +29,10 @@ Message kinds and who legitimately sends them:
   loss_down  server -> party   scalar losses (h, h_bar_1..K)
   grad_down  server -> party   intermediate gradient dL/dc_m  (TIG/TG only)
   param_down server -> party   a parameter block               (TG only)
+  serve_down server -> party   an inference query: the int32 sample ids the
+                               server wants c values for (federated serving,
+                               serving/federated.py); the party answers with
+                               an ordinary batched c_up
 
 ZOO-VFL traffic is {c_up, c_hat_up, loss_down}; the presence of
 ``grad_down``/``param_down`` in a transcript is precisely what the
@@ -52,9 +56,12 @@ import numpy as np
 from repro.configs.base import NetworkConfig
 from repro.core.exchange import SCALAR_BYTES, wire_nbytes
 
-KINDS = ("c_up", "c_hat_up", "loss_down", "grad_down", "param_down")
+# serve_down is appended at the END: the TCP transport versions kinds by
+# tuple index (transport.KINDS.index), so existing frames keep their codes
+KINDS = ("c_up", "c_hat_up", "loss_down", "grad_down", "param_down",
+         "serve_down")
 UP_KINDS = ("c_up", "c_hat_up")
-DOWN_KINDS = ("loss_down", "grad_down", "param_down")
+DOWN_KINDS = ("loss_down", "grad_down", "param_down", "serve_down")
 
 SERVER = "server"
 

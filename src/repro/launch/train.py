@@ -122,6 +122,21 @@ def parse_args(argv=None):
                    help="per-entry clip bound C on the uploaded c values "
                         "— the mechanism's sensitivity; REQUIRED with a "
                         "finite --dp-epsilon")
+    p.add_argument("--serve", type=int, default=None,
+                   help="vfl-zoo only: serve this many inference requests "
+                        "through the federated serving engine instead of "
+                        "training — every occupied slot rides ONE wire "
+                        "crossing per party per step (serving/federated.py, "
+                        "docs/serving.md); composes with --network (priced "
+                        "simulated wire) or --transport tcp (real party "
+                        "processes; --ckpt-dir serves checkpointed blocks)")
+    p.add_argument("--serve-batch", type=int, default=None,
+                   help="concurrent serving slots = max wire batch B "
+                        "(default ServingConfig.slots); requires --serve")
+    p.add_argument("--serve-cache", type=int, default=None,
+                   help="per-party LRU answer-cache capacity, keyed "
+                        "(sample id, params version) (default "
+                        "ServingConfig.cache_entries); requires --serve")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--resume", action="store_true",
@@ -148,6 +163,25 @@ def parse_args(argv=None):
     if args.dropout_at is not None and args.transport != "tcp":
         p.error("--dropout-at injects a process crash; it requires "
                 "--transport tcp")
+    if args.serve is not None:
+        if args.mode != "vfl-zoo":
+            p.error("--serve drives the federated serving round; it "
+                    "requires --mode vfl-zoo")
+        if args.serve <= 0:
+            p.error("--serve must be a positive request count")
+        if args.dropout_at is not None:
+            p.error("--dropout-at scripts a TRAINING fault; the serving "
+                    "path has no round schedule to crash at")
+        if args.resume:
+            p.error("--resume restores training state; serving reads "
+                    "checkpoints directly via --ckpt-dir")
+        if args.dp_epsilon is not None:
+            p.error("--dp-epsilon defends training releases keyed by "
+                    "round; the serving answer is a deterministic keyless "
+                    "release — serve undefended (docs/serving.md)")
+    elif args.serve_batch is not None or args.serve_cache is not None:
+        p.error("--serve-batch/--serve-cache size the serving engine; "
+                "they require --serve")
     if args.resume and not args.ckpt_dir:
         p.error("--resume restores from --ckpt-dir; pass --ckpt-dir")
     # DP defends the vfl-zoo upload seam; incoherent combos die here
@@ -262,9 +296,76 @@ def run_tcp(args, cfg, log):
     return final_h
 
 
+def run_serve(args, cfg, log):
+    """--serve N: federated inference serving (docs/serving.md). Builds
+    the same runtime problem spec as --transport tcp training, then
+    serves N requests through serving/federated.py — in-process party
+    backends on the memory transport (optionally priced by --network),
+    real party processes answering over sockets on tcp (with blocks
+    restored from --ckpt-dir when given)."""
+    from repro.configs import NETWORK_PROFILES, ServingConfig
+
+    sc = ServingConfig(
+        requests=args.serve,
+        slots=args.serve_batch if args.serve_batch is not None
+        else ServingConfig.slots,
+        cache_entries=args.serve_cache if args.serve_cache is not None
+        else ServingConfig.cache_entries)
+    spec = {"kind": "lr", "parties": args.parties,
+            "features": cfg.d_model, "samples": max(64, args.batch_size * 8),
+            "batch": args.batch_size, "seed": args.seed,
+            "vfl": {"mu": args.mu, "lr_party": args.lr,
+                    "lr_server": args.lr / args.parties}}
+    if args.codec != "f32":
+        spec["vfl"]["codec"] = args.codec
+    rng = np.random.default_rng(args.seed)
+    sample_ids = rng.integers(0, spec["samples"], sc.requests)
+
+    if args.transport == "tcp":
+        from repro.configs import RuntimeConfig
+        from repro.runtime.serving import run_tcp_serving
+        cfg_rt = RuntimeConfig(
+            deadline_s=max(300.0, 120.0 + 0.1 * sc.requests))
+        res = run_tcp_serving(spec, sample_ids, cfg=cfg_rt, slots=sc.slots,
+                              cache_entries=sc.cache_entries,
+                              ckpt_root=args.ckpt_dir)
+        met = res["metrics"]
+        log.log(sc.requests, transport="tcp", served=met["served"],
+                steps=met["steps"], cache_hits=met["cache_hits"],
+                bytes_per_prediction=met["bytes_per_prediction"])
+        return float(met["served"])
+
+    from repro.core.wire import NetworkChannel
+    from repro.runtime.problem import build_problem
+    from repro.serving.federated import FederatedServingEngine, ServeRequest
+
+    prob = build_problem(spec)
+    channel = (NetworkChannel(NETWORK_PROFILES[args.network],
+                              seed=args.seed) if args.network else None)
+    eng = FederatedServingEngine.from_problem(
+        prob, channel=channel, slots=sc.slots,
+        cache_entries=sc.cache_entries)
+    for i, sid in enumerate(sample_ids):
+        eng.submit(ServeRequest(rid=i, sample_id=int(sid)))
+    eng.run()
+    eng.validate_wire()      # measured bytes == analytic, every run
+    met = eng.metrics()
+    extra = ({"network": args.network, "wire_s": met["wire_s"],
+              "requests_per_s": met["requests_per_s"],
+              "p50_s": met["p50_s"], "p99_s": met["p99_s"]}
+             if args.network else {})
+    log.log(sc.requests, transport="memory", served=met["served"],
+            steps=met["steps"], cache_hits=met["cache_hits"],
+            bytes_per_prediction=met["bytes_per_prediction"], **extra)
+    return float(met["served"])
+
+
 def main(argv=None):
     args = parse_args(argv)
     cfg = get_config(args.arch, reduced=args.reduced)
+    if args.serve is not None:
+        return run_serve(args, cfg,
+                         MetricLogger(f"serve:{args.arch}:vfl-zoo"))
     if args.transport == "tcp":
         return run_tcp(args, cfg,
                        MetricLogger(f"train:{args.arch}:vfl-zoo-tcp"))

@@ -6,6 +6,8 @@ from repro.runtime.failures import (CRASH_EXIT_CODE, NO_FAILURES,  # noqa
 from repro.runtime.harness import (history_losses, run_federation,  # noqa
                                    run_reference)
 from repro.runtime.server import FederationError, RuntimeServer  # noqa
+from repro.runtime.serving import (RemotePartyBackend,  # noqa
+                                   run_tcp_serving, serving_party_main)
 from repro.runtime.transport import (ConnectionClosed, FramedSocket,  # noqa
                                      TransportError, TransportTimeout,
                                      WireFormatError, WIRE_VERSION,

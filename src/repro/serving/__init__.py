@@ -1,1 +1,5 @@
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.federated import (AnswerCache,  # noqa: F401
+                                     FederatedServingEngine,
+                                     LocalPartyBackend, ServeRequest,
+                                     answer_serve_query)

@@ -11,9 +11,19 @@ longest request.
 Prefill is teacher-forced through the decode path slot-wise (correct for
 every architecture family, including SSM state builds), with the slot's
 emitted logits ignored until its prompt is consumed.
+
+Admission is O(1) per wave: all slots admitted in a step share ONE jitted
+mask-based cache reset (`_reset_slots`) instead of an eager whole-cache
+rebuild per request, and the waiting queue is a deque (popleft), not a
+list with O(n) pop(0). Non-greedy sampling keys each token by
+(request id, tokens generated) — fold_in, not a stepwise key split — so a
+request's sampled continuation is independent of which slot it landed in
+and of its co-tenants (benchmarks/bench_serving.py measures the admission
+cost drop; tests/test_serving.py pins the invariances).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -22,6 +32,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+
+
+@jax.jit
+def _reset_slots(cache, mask):
+    """Zero every masked slot's entries across the whole cache tree in one
+    compiled dispatch. Leaves with a slot axis (ndim >= 2, axis 1 —
+    the layout ``Model.init_cache`` commits to) are masked; scalars and
+    per-model vectors pass through. Bitwise identical to resetting each
+    slot with ``.at[:, s].set(0)``."""
+    def reset(a):
+        if a.ndim < 2:
+            return a
+        m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, jnp.zeros((), a.dtype), a)
+    return jax.tree.map(reset, cache)
 
 
 @dataclass
@@ -52,7 +77,7 @@ class ServingEngine:
         self.key = jax.random.key(seed)
         self.cache = model.init_cache(params, slots, max_len, frames=frames)
         self._step = jax.jit(model.decode_step)
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * slots
         self._cursor = np.zeros(slots, np.int64)     # next prompt index
         self._pos = np.zeros(slots, np.int64)        # absolute position
@@ -70,16 +95,19 @@ class ServingEngine:
 
     # ------------------------------------------------------------ inner ---
     def _admit(self):
+        fresh = []
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
-                self.active[s] = req
+                self.active[s] = self.queue.popleft()
                 self._cursor[s] = 0
                 self._pos[s] = 0
-                # fresh state for this slot: zero the slot's cache entries
-                self.cache = jax.tree.map(
-                    lambda a: a.at[:, s].set(jnp.zeros_like(a[:, s]))
-                    if a.ndim >= 2 else a, self.cache)
+                fresh.append(s)
+        if fresh:
+            # fresh state for the admitted slots: one fused mask reset for
+            # the whole wave, not an eager cache rebuild per request
+            mask = np.zeros(self.slots, bool)
+            mask[fresh] = True
+            self.cache = _reset_slots(self.cache, jnp.asarray(mask))
 
     def step(self):
         self._admit()
@@ -97,8 +125,17 @@ class ServingEngine:
         if self.greedy:
             nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         else:
-            self.key, sub = jax.random.split(self.key)
-            nxt = np.asarray(jax.random.categorical(sub, logits[:, 0]))
+            # key by (rid, tokens generated): a request samples the same
+            # continuation whatever slot it lands in and whoever shares
+            # the batch (empty slots borrow the base key; their draw is
+            # discarded below)
+            keys = jnp.stack([
+                jax.random.fold_in(jax.random.fold_in(self.key, req.rid),
+                                   len(req.out_tokens))
+                if req is not None else self.key
+                for req in self.active])
+            nxt = np.asarray(
+                jax.vmap(jax.random.categorical)(keys, logits[:, 0]))
         for s, req in enumerate(self.active):
             if req is None:
                 continue

@@ -1,0 +1,381 @@
+"""Federated inference serving — batch every user onto ONE wire crossing
+per party per step.
+
+Training already showed the paper's comms structure (only function values
+cross the boundary); this module measures what the same structure can
+SERVE. A `FederatedServingEngine` reuses the slot-based admission of
+``serving/engine.py`` (queue -> admit -> retire), but each step's forward
+is a federated round:
+
+  1. the server batches all occupied slots' sample ids into one
+     ``serve_down`` query per party (int32 ids, 4 bytes each — the entity
+     alignment both endpoints already share);
+  2. each party answers with ONE batched ``c_up`` Message whose (B,)
+     payload rides the existing f32/bf16/int8 codecs with measured
+     ``wire_nbytes``;
+  3. the server reduces each slot's c row through ``model.server_predict``
+     and retires every occupied slot — one round per step.
+
+Per-message channel latency and per-message codec overhead are therefore
+paid q times per STEP instead of q times per PREDICTION — the O(B)
+amortization ``benchmarks/bench_serving.py`` measures on the priced
+NetworkChannel profiles. Queries are issued to ALL parties before any
+answer is collected (async issue), so the per-step wire time is the MAX
+of the per-party round trips, not their sum; a per-party LRU answer
+cache keyed by (sample id, params version) lets repeated users skip the
+wire entirely.
+
+Bitwise discipline: XLA is NOT batch-invariant for batched matmuls (a
+(B, d) @ (d,) forward differs in the last ulps from the B individual
+rows), so parties evaluate every sample through ONE shared jitted
+single-sample forward and batching happens only at the WIRE level. That
+makes the batched output bit-identical to the sequential B=1 output by
+construction — independent of slot position, co-tenants, mid-stream
+admission, and transport (the TCP serving party in
+``runtime/serving.py`` runs the same helpers; tests pin TCP == memory).
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict, deque
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comms import (CODEC_MSG_OVERHEAD, CODEC_VALUE_BYTES,
+                              serving_round_by_kind,
+                              validate_serving_channel)
+from repro.core.exchange import ZOExchange
+from repro.core.wire import SERVER, Channel, InMemoryChannel, Message, party
+
+
+# ------------------------------------------------------- per-sample math --
+
+@functools.partial(jax.jit, static_argnames=("model", "m"))
+def _party_infer_one(model, w_m, x_row, m):
+    """F_m on ONE padded feature row -> its scalar c value. Every serving
+    path (local backend, TCP party process) funnels through this one
+    compiled function, so a sample's c value is bitwise independent of
+    which batch, slot, or transport it rides in."""
+    return model.party_forward(w_m, model.slice_features(x_row[None], m),
+                               m)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("model",))
+def _server_predict_one(model, w0, c_row):
+    """F_0's decision for ONE sample's (q,) c row — the per-slot reduce,
+    batch-size-independent for the same reason as `_party_infer_one`."""
+    return model.server_predict(w0, c_row[None])[0]
+
+
+def compute_party_answers(model, m: int, w_m, X, ids) -> np.ndarray:
+    """Party m's c values for the queried sample ids, one shared jitted
+    single-sample forward per id (B <= slots, tiny towers — the wire, not
+    the flops, is what serving amortizes)."""
+    return np.asarray(
+        [np.asarray(_party_infer_one(model, w_m, jnp.asarray(X[int(i)]), m))
+         for i in np.asarray(ids).reshape(-1)], np.float32)
+
+
+def answer_serve_query(model, m: int, w_m, X, ex: ZOExchange,
+                       msg: Message, version: int = 0) -> Message:
+    """The party side of one serving round: serve_down query in, ONE
+    batched c_up out. The payload rides ``ex.encode_up`` with key=None —
+    a deterministic release (int8 rounds to nearest), identical across
+    transports; the echoed ids/version ride meta (protocol context both
+    endpoints already have, excluded from byte accounting like training's
+    idx)."""
+    ids = np.asarray(msg.payload, np.int64).reshape(-1)
+    cs = compute_party_answers(model, m, w_m, X, ids)
+    wire = jax.tree.map(np.asarray, ex.encode_up(jnp.asarray(cs)))
+    return Message.make("c_up", party(m), SERVER, msg.round, wire,
+                        meta={"idx": ids, "version": int(version)})
+
+
+# ------------------------------------------------------------- lru cache --
+
+class AnswerCache:
+    """Per-party LRU of decoded c values keyed (sample_id, params_version).
+    A hit skips the wire for that (party, sample) entirely; a params
+    bump changes the version component, so stale answers miss instead of
+    serving predictions from retired blocks."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._d: OrderedDict[tuple, float] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key) -> Optional[float]:
+        if self.capacity <= 0 or key not in self._d:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return self._d[key]
+
+    def peek(self, key) -> Optional[float]:
+        return self._d.get(key)
+
+    def put(self, key, value: float) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+# -------------------------------------------------------------- backends --
+
+class LocalPartyBackend:
+    """In-process party: holds its private block + the full feature matrix
+    (of which it only ever reads its own vertical slice) and answers
+    serve_down queries with the SAME helpers the TCP party process runs.
+    ``request``/``collect`` are split so the engine can issue every
+    party's query before collecting any answer — the interface a socket
+    backend implements with genuinely concurrent remote compute."""
+
+    def __init__(self, model, m: int, w_m, X, ex: ZOExchange,
+                 version: int = 0):
+        self.model = model
+        self.m = m
+        self.w_m = w_m
+        self.X = X
+        self.ex = ex
+        self.version = int(version)
+        self._pending: Optional[Message] = None
+
+    def set_params(self, w_m, version: int) -> None:
+        self.w_m = w_m
+        self.version = int(version)
+
+    def request(self, msg: Message) -> None:
+        assert self._pending is None, "one outstanding query per step"
+        self._pending = msg
+
+    def collect(self) -> Message:
+        msg, self._pending = self._pending, None
+        return answer_serve_query(self.model, self.m, self.w_m, self.X,
+                                  self.ex, msg, version=self.version)
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------- engine --
+
+@dataclass
+class ServeRequest:
+    """One user's inference request: predict the label of ``sample_id``."""
+    rid: int
+    sample_id: int
+    prediction: Optional[float] = None
+    enqueued_s: float = 0.0       # virtual clock at submit
+    latency_s: float = 0.0        # completion - submit (includes queueing)
+    step_served: int = -1
+
+
+class FederatedServingEngine:
+    """Slot-based federated inference front end (module docstring).
+
+    ``backends`` is one party backend per party (local in-process by
+    default via :meth:`from_problem`; ``runtime/serving.py`` passes
+    socket-backed remotes). ``channel`` prices and accounts every
+    crossing — an ``InMemoryChannel`` serves at wire-cost zero, a
+    ``NetworkChannel`` profile yields per-request latency from the
+    virtual clock, a ``RecordingChannel`` feeds the privacy attacks.
+    """
+
+    def __init__(self, model, w0, backends, exchange: ZOExchange, *,
+                 channel: Optional[Channel] = None, slots: int = 8,
+                 cache_entries: int = 2048):
+        if exchange.dp is not None:
+            raise ValueError(
+                "serving answers are deterministic keyless releases; a "
+                "DP-defended exchange requires a per-release noise key "
+                "schedule the serving round does not define — serve with "
+                "an undefended exchange (see docs/serving.md)")
+        self.model = model
+        self.w0 = w0
+        self.backends = list(backends)
+        self.ex = exchange
+        self.channel = channel if channel is not None else InMemoryChannel()
+        self.slots = int(slots)
+        self.caches = [AnswerCache(cache_entries) for _ in self.backends]
+        self.queue: deque[ServeRequest] = deque()
+        self.active: list[Optional[ServeRequest]] = [None] * self.slots
+        self.steps = 0
+        self.clock_s = 0.0            # virtual serving clock (wire time)
+        self.completed: list[ServeRequest] = []
+        # analytic per-kind expectation, accumulated per crossing so it
+        # stays exact under cache hits and partial batches; validated
+        # against the channel's measured counters by validate_wire()
+        self._analytic = {"serve_down": 0, "c_up": 0}
+
+    @classmethod
+    def from_problem(cls, prob, *, channel: Optional[Channel] = None,
+                     slots: int = 8, cache_entries: int = 2048,
+                     party_params: Optional[list] = None, w0=None,
+                     versions: Optional[list] = None
+                     ) -> "FederatedServingEngine":
+        """Engine over in-process parties for a runtime problem spec
+        (``runtime/problem.build_problem``): blocks seed-initialize from
+        the same ``trainer_keys`` derivation every training executor
+        uses, unless explicit (trained / checkpointed) params are
+        passed."""
+        from repro.core import async_host
+
+        model = prob.model
+        q = model.num_parties
+        server_key, party_keys, _ = async_host.trainer_keys(prob.seed, q)
+        if party_params is None:
+            party_params = [model.init_party(party_keys[m], m)
+                            for m in range(q)]
+        if w0 is None:
+            w0 = model.init_server(server_key)
+        versions = versions if versions is not None else [0] * q
+        ex = ZOExchange.from_config(prob.vfl)
+        backends = [LocalPartyBackend(model, m, party_params[m], prob.X,
+                                      ex, version=versions[m])
+                    for m in range(q)]
+        return cls(model, w0, backends, ex, channel=channel, slots=slots,
+                   cache_entries=cache_entries)
+
+    # ------------------------------------------------------------- api ---
+    def submit(self, req: ServeRequest) -> None:
+        req.enqueued_s = self.clock_s
+        self.queue.append(req)
+
+    def set_party_params(self, m: int, w_m, version: int) -> None:
+        """Rotate party m's block (e.g. after a training round lands a new
+        checkpoint). The version bump invalidates the party's cached
+        answers by KEY — no flush walk."""
+        self.backends[m].set_params(w_m, version)
+
+    def run(self, max_steps: int = 10_000) -> list[ServeRequest]:
+        while (self.queue or any(r is not None for r in self.active)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.completed
+
+    # ----------------------------------------------------------- inner ---
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                self.active[s] = self.queue.popleft()
+
+    def step(self) -> None:
+        self._admit()
+        occupied = [(s, r) for s, r in enumerate(self.active)
+                    if r is not None]
+        if not occupied:
+            return
+        rnd = self.steps
+        codec = self.ex.codec.name
+        # phase 1 — cache resolve + async issue: every party's query goes
+        # out before any answer is read, so crossings overlap and the
+        # step pays MAX(per-party rtt), not the sum
+        issued = []                      # (m, unique miss ids, down rtt)
+        for m, be in enumerate(self.backends):
+            ver = be.version
+            ids = []
+            for _, req in occupied:
+                sid = int(req.sample_id)
+                if sid in ids:
+                    continue
+                if self.caches[m].get((sid, ver)) is None:
+                    ids.append(sid)
+            if not ids:
+                continue
+            msg = Message.make("serve_down", SERVER, party(m), rnd,
+                               np.asarray(ids, np.int32))
+            t0 = self.channel.time_s
+            msg = self.channel.send(msg)
+            self._analytic["serve_down"] += 4 * len(ids)
+            be.request(msg)
+            issued.append((m, ids, self.channel.time_s - t0))
+        # phase 2 — collect each party's single batched answer. Fresh
+        # values are held in a per-step dict for the reduce below (the
+        # LRU may be full or disabled) and offered to the cache for
+        # future steps.
+        fresh: list[dict[int, float]] = [{} for _ in self.backends]
+        step_wire_s = 0.0
+        for m, ids, down_s in issued:
+            reply = self.backends[m].collect()
+            t0 = self.channel.time_s
+            reply = self.channel.observe(reply)
+            step_wire_s = max(step_wire_s,
+                              down_s + (self.channel.time_s - t0))
+            vals = np.asarray(self.ex.decode_up(reply.payload),
+                              np.float32).reshape(-1)
+            assert len(vals) == len(ids), (len(vals), len(ids))
+            ver = self.backends[m].version
+            for sid, v in zip(ids, vals):
+                fresh[m][int(sid)] = float(v)
+                self.caches[m].put((int(sid), ver), float(v))
+            self._analytic["c_up"] += (
+                len(ids) * CODEC_VALUE_BYTES[codec]
+                + CODEC_MSG_OVERHEAD[codec])
+        self.clock_s += step_wire_s
+        # phase 3 — per-slot reduce; every occupied slot retires
+        for s, req in occupied:
+            sid = int(req.sample_id)
+            row = np.asarray(
+                [fresh[m].get(sid,
+                              self.caches[m].peek(
+                                  (sid, self.backends[m].version)))
+                 for m in range(len(self.backends))], np.float32)
+            pred = _server_predict_one(self.model, self.w0,
+                                       jnp.asarray(row))
+            req.prediction = np.asarray(pred).item()
+            req.latency_s = self.clock_s - req.enqueued_s
+            req.step_served = rnd
+            self.completed.append(req)
+            self.active[s] = None
+        self.steps += 1
+
+    # ------------------------------------------------------- reporting ---
+    def validate_wire(self) -> dict:
+        """Measured channel counters == the analytic per-kind serving
+        formula (``comms.serving_round_by_kind``); raises on drift."""
+        return validate_serving_channel(self.channel, dict(self._analytic))
+
+    def metrics(self) -> dict:
+        lats = sorted(r.latency_s for r in self.completed)
+        n = len(lats)
+
+        def pct(p: float) -> float:
+            return lats[min(n - 1, int(p * n))] if n else 0.0
+
+        wire_bytes = sum(self.channel.bytes_by_kind.get(k, 0)
+                         for k in ("serve_down", "c_up"))
+        return {
+            "served": n,
+            "steps": self.steps,
+            "wire_s": self.clock_s,
+            "requests_per_s": (n / self.clock_s if self.clock_s > 0
+                               else float("inf")),
+            "p50_s": pct(0.50),
+            "p99_s": pct(0.99),
+            "wire_bytes": wire_bytes,
+            "bytes_per_prediction": wire_bytes / max(n, 1),
+            "cache_hits": sum(c.hits for c in self.caches),
+            "cache_misses": sum(c.misses for c in self.caches),
+        }
+
+    def close(self) -> None:
+        for be in self.backends:
+            be.close()
+
+
+def analytic_round_bytes(batch: int, parties: int,
+                         codec: str = "f32") -> dict:
+    """Convenience re-export of the per-step serving formula."""
+    return serving_round_by_kind(batch, parties, codec)
