@@ -1,0 +1,116 @@
+"""Observability bench: the measured price of `--trace` on the hottest
+path, plus the reconstruction quality of the merged trace.
+
+Rows:
+  * fused_round_untraced      us/round, fused defended round, tracing off
+  * fused_round_traced        same problem with a live tracer; derived
+                              carries overhead_pct and the <5% gate the
+                              ISSUE pins (pass=1)
+  * traced_equals_untraced    bitwise parity of the two runs above
+                              (losses AND final params) — the overhead
+                              number is only meaningful if the traced
+                              run computed the identical thing
+  * chain_memory              complete party->wire->server chains over
+                              the merged in-memory trace (>=95% gate)
+  * chain_tcp                 same metric across REAL process
+                              boundaries: a small traced TCP federation,
+                              merged from per-process files
+
+Timing uses each run's own history clock (``history[-1][0]`` is the
+wall-clock of the last round relative to run start), min over reps, so
+problem build and channel setup never pollute the per-round number; one
+warmup run populates the jit caches before anything is timed.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro import obs
+from repro.obs.collect import chain_completeness, load_dir
+from repro.runtime import run_reference
+
+SPEC = {"kind": "lr", "parties": 2, "features": 32, "samples": 128,
+        "batch": 16, "seed": 0,
+        "vfl": {"mu": 5e-2, "lr_party": 5e-2, "lr_server": 2.5e-2,
+                "fused": True,
+                "dp": {"epsilon": 4.0, "delta": 1e-5, "clip": 1.0}}}
+ROUNDS = 48
+REPS = 3
+OVERHEAD_GATE_PCT = 5.0
+
+
+def _run_once(rounds, trace_dir=None):
+    if trace_dir is not None:
+        obs.configure(trace_dir, role="bench")
+    try:
+        return run_reference(SPEC, rounds)
+    finally:
+        if trace_dir is not None:
+            obs.configure(None)
+
+
+def _per_round_s(res, rounds) -> float:
+    return res.history[-1][0] / (rounds * SPEC["parties"])
+
+
+def run(rounds: int = ROUNDS, reps: int = REPS, tcp: bool = True):
+    rows = []
+    _run_once(rounds)                       # warm the jit caches
+
+    base = None
+    for _ in range(reps):
+        _, res = _run_once(rounds)
+        s = _per_round_s(res, rounds)
+        base = s if base is None else min(base, s)
+    rows.append(("fused_round_untraced", base * 1e6,
+                 f"rounds={rounds};reps={reps}"))
+
+    traced = None
+    with tempfile.TemporaryDirectory() as td:
+        for _ in range(reps):
+            tr_t, res_t = _run_once(rounds, trace_dir=td)
+            s = _per_round_s(res_t, rounds)
+            traced = s if traced is None else min(traced, s)
+    overhead = (traced - base) / base * 100.0
+    rows.append(("fused_round_traced", traced * 1e6,
+                 f"overhead_pct={overhead:.2f};"
+                 f"pass={int(overhead < OVERHEAD_GATE_PCT)};"
+                 f"gate_pct={OVERHEAD_GATE_PCT};rounds={rounds}"))
+
+    # parity: the traced run above must have computed the identical thing
+    tr_u, res_u = _run_once(rounds)
+    equal = [h for _, h in res_u.history] == [h for _, h in res_t.history]
+    for m in range(SPEC["parties"]):
+        equal = equal and bool(np.array_equal(
+            np.asarray(tr_u.party_w[m]["w"]),
+            np.asarray(tr_t.party_w[m]["w"])))
+    rows.append(("traced_equals_untraced", 0.0, f"equal={int(equal)}"))
+
+    with tempfile.TemporaryDirectory() as td:
+        _run_once(rounds, trace_dir=td)
+        recs = load_dir(td)
+        complete, total, frac = chain_completeness(recs)
+    rows.append(("chain_memory", 0.0,
+                 f"complete={complete};total={total};"
+                 f"fraction={frac:.4f};pass={int(frac >= 0.95)};"
+                 f"records={len(recs)}"))
+
+    if tcp:
+        from repro.configs.base import RuntimeConfig
+        from repro.runtime import run_federation
+        tcp_spec = dict(SPEC, vfl={"mu": 1e-3, "lr_party": 1e-2,
+                                   "lr_server": 1e-3})
+        with tempfile.TemporaryDirectory() as td:
+            run_federation(tcp_spec, 4,
+                           cfg=RuntimeConfig(deadline_s=240.0,
+                                             trace_dir=td))
+            recs = load_dir(td)
+            complete, total, frac = chain_completeness(recs)
+            roles = {r["role"] for r in recs}
+        rows.append(("chain_tcp", 0.0,
+                     f"complete={complete};total={total};"
+                     f"fraction={frac:.4f};pass={int(frac >= 0.95)};"
+                     f"processes={len(roles)}"))
+    return rows

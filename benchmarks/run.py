@@ -43,6 +43,10 @@ SUITES = {
                 "Federated inference serving: one wire crossing per party "
                 "per step",
                 "serving"),
+    "obs": ("benchmarks.bench_obs",
+            "Observability: --trace overhead on the fused round + merged "
+            "trace chain reconstruction",
+            "obs"),
 }
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -1,20 +1,25 @@
 """zvlint — static analysis for this repo's hand-maintained invariants.
 
-``python -m repro.analysis src`` runs five rules, each the static
+``python -m repro.analysis src`` runs six rules, each the static
 shadow of a bug class this repo has shipped and fixed (docs/analysis.md):
 
   rng-discipline      keyed derivation only; no ad-hoc seed arithmetic,
                       seed-blind streams, or wall-clock in the core
+                      (module policy: obs/ may read clocks — it exists
+                      to — but never entropy)
   lock-discipline     `# guarded-by:` attributes only under their lock
   kernel-float-safety no FMA/reciprocal/literal rewrites in bit-exact
                       kernels
   wire-closure        message-kind literals closed over wire.KINDS
   config-coherence    config fields <-> train.py flags, both directions
+  obs-discipline      scoped code touches the tracer only via
+                      obs.trace / obs.maybe_tracer — never configure,
+                      Tracer(), or deep obs imports
 """
 from repro.analysis.core import (Finding, Report, Rule, all_rules, analyze,
                                  register)
 # importing the rule modules registers them
 from repro.analysis import (rules_config, rules_kernel, rules_lock,  # noqa: F401,E402
-                            rules_rng, rules_wire)
+                            rules_obs, rules_rng, rules_wire)
 
 __all__ = ["Finding", "Report", "Rule", "all_rules", "analyze", "register"]

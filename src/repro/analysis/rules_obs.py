@@ -1,0 +1,106 @@
+"""obs-discipline: scoped code reaches the tracer only through the two
+approved entry points.
+
+The observability layer (``repro/obs``) is bitwise-invisible by
+construction, but only as long as the instrumented subsystems use it
+through the narrow interface that keeps it so: ``obs.trace(...)`` (a
+shared no-op context manager when tracing is off) and
+``obs.maybe_tracer()`` (the cached handle-or-None). Everything else in
+the package is a hazard inside the deterministic core:
+
+  * constructing a ``Tracer`` directly, or calling ``obs.configure``,
+    from core/runtime/dp/kernels would let library code flip tracing on
+    for the whole process — the on/off decision belongs to the
+    entry points (launch/train.py, the runtime harness env handoff,
+    tests) so that "untraced run" stays a meaningful baseline;
+  * deep imports (``from repro.obs.tracer import ...``,
+    ``from repro.obs.collect import ...``) couple the core to collector
+    internals that are free to change, and skip the ``maybe_tracer``
+    fast path that makes a disabled trace point one attribute read.
+
+Scope: files under ``core/``, ``runtime/``, ``dp/``, ``kernels/`` path
+segments — the same subsystems whose bit-parity acceptances the tracer
+must never perturb. Unscoped code (launch, tests, benchmarks, the obs
+package itself) may use the full API; ``configure`` is exactly for it.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.core import Finding, Rule, dotted_name, register
+
+SCOPE_PARTS = {"core", "runtime", "dp", "kernels"}
+APPROVED_NAMES = {"trace", "maybe_tracer"}
+OBS_MODULE = "repro.obs"
+
+
+@register
+class ObsDiscipline(Rule):
+    name = "obs-discipline"
+    scope = "file"
+    description = ("core/runtime/dp/kernels may touch the tracer only via "
+                   "`from repro.obs import trace, maybe_tracer` — no "
+                   "Tracer() construction, obs.configure, module imports, "
+                   "or deep submodule imports in the scoped subsystems")
+
+    def check_file(self, ctx) -> list[Finding]:
+        parts = set(Path(ctx.rel).parts)
+        if not (parts & SCOPE_PARTS):
+            return []
+        out: list[Finding] = []
+
+        def emit(node, msg):
+            out.append(Finding(self.name, ctx.rel, node.lineno,
+                               node.col_offset, msg))
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == OBS_MODULE or \
+                            alias.name.startswith(OBS_MODULE + "."):
+                        emit(node, f"`import {alias.name}` in scoped code — "
+                             "use `from repro.obs import trace, "
+                             "maybe_tracer`; the module handle exposes "
+                             "configure/Tracer, which only entry points "
+                             "may touch")
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod.startswith(OBS_MODULE + "."):
+                    emit(node, f"deep import `from {mod} import ...` in "
+                         "scoped code couples the core to obs internals — "
+                         "only `from repro.obs import trace, maybe_tracer` "
+                         "is approved")
+                elif mod == OBS_MODULE:
+                    for alias in node.names:
+                        if alias.name not in APPROVED_NAMES:
+                            emit(node, f"`from repro.obs import "
+                                 f"{alias.name}` in scoped code — only "
+                                 "trace/maybe_tracer are approved; "
+                                 "configure/Tracer belong to entry points "
+                                 "(launch, harness, tests) so library code "
+                                 "can never flip tracing on")
+                elif mod == "repro":
+                    for alias in node.names:
+                        if alias.name == "obs":
+                            emit(node, "`from repro import obs` in scoped "
+                                 "code — the module handle exposes "
+                                 "configure/Tracer; import trace/"
+                                 "maybe_tracer by name instead")
+            elif isinstance(node, ast.Call):
+                full = dotted_name(node.func)
+                if full is None:
+                    continue
+                term = full.rsplit(".", 1)[-1]
+                if term == "Tracer":
+                    emit(node, "direct Tracer() construction in scoped "
+                         "code — the process tracer is installed by "
+                         "configure at an entry point or auto-configured "
+                         "from REPRO_TRACE_DIR; scoped code asks "
+                         "maybe_tracer() for the handle")
+                elif term == "configure" and "obs" in full.split("."):
+                    emit(node, f"`{full}(...)` flips process tracing from "
+                         "scoped code — the on/off decision belongs to "
+                         "entry points so the untraced baseline stays "
+                         "meaningful")
+        return out

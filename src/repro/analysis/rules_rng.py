@@ -19,12 +19,23 @@ Hazard classes (all shipped at some point in this repo's history):
     (``time.perf_counter``/``monotonic`` are always allowed — they
     measure, they never feed state).
 
-Scope: files under ``core/``, ``runtime/``, ``dp/``, ``kernels/``
-path segments. ``utils/prng.py`` and the bodies of the approved
-helpers themselves are exempt (they ARE the derivation layer).
-Plain integer-literal seeds (``jax.random.key(0)``) are allowed: a
-literal is reproducible by construction — the hazards are drifting
-formulas and non-seed variables, not constants.
+Scope: files under ``core/``, ``runtime/``, ``dp/``, ``kernels/``,
+``obs/`` path segments. ``utils/prng.py`` and the bodies of the
+approved helpers themselves are exempt (they ARE the derivation
+layer). Plain integer-literal seeds (``jax.random.key(0)``) are
+allowed: a literal is reproducible by construction — the hazards are
+drifting formulas and non-seed variables, not constants.
+
+Module policy, not per-line suppression: ``obs/`` is the out-of-band
+observability layer (repro/obs) whose entire JOB is reading clocks —
+every record it writes is timestamped and none of it feeds back into
+computation (the bitwise-parity tests pin that). Scattering
+``# zvlint: measurement`` on every line there would train readers to
+paste the annotation reflexively, so the wall-clock entries of the
+nondeterminism table are exempted for ``obs/`` files wholesale
+(``WALLCLOCK_OK_PARTS``). Entropy (``os.urandom``, ``uuid4``),
+stdlib ``random``, and seed-blind stream construction stay flagged
+even there: a tracer has no business drawing randomness at all.
 """
 from __future__ import annotations
 
@@ -34,7 +45,10 @@ from pathlib import Path
 from repro.analysis.core import (Finding, MEASUREMENT_RE, Rule, dotted_name,
                                  register)
 
-SCOPE_PARTS = {"core", "runtime", "dp", "kernels"}
+SCOPE_PARTS = {"core", "runtime", "dp", "kernels", "obs"}
+# module policy: obs/ records wall-clock BY DESIGN (out-of-band traces,
+# pinned bitwise-invisible) — clock reads there need no annotation
+WALLCLOCK_OK_PARTS = {"obs"}
 APPROVED_HELPERS = {"fold_name", "party_rng_seed", "trainer_keys",
                     "draw_round"}
 EXEMPT_BASENAMES = {"prng.py"}
@@ -54,6 +68,9 @@ _NONDET = {
     "np.random.seed": "legacy process-global seeding",
     "numpy.random.seed": "legacy process-global seeding",
 }
+# the subset a WALLCLOCK_OK module policy forgives (clock reads only —
+# entropy and process-global seeding are never a module's job)
+_WALLCLOCK = {k for k, v in _NONDET.items() if v == "wall-clock read"}
 
 
 def _terminal(node) -> str:
@@ -92,6 +109,7 @@ class RngDiscipline(Rule):
         parts = set(Path(ctx.rel).parts)
         if not (parts & SCOPE_PARTS) or Path(ctx.rel).name in EXEMPT_BASENAMES:
             return []
+        wallclock_ok = bool(parts & WALLCLOCK_OK_PARTS)
         out: list[Finding] = []
         # line spans of approved helper bodies (they may use arithmetic:
         # they are the one place the formula is allowed to live)
@@ -114,6 +132,8 @@ class RngDiscipline(Rule):
             emit = lambda msg, n=node: out.append(   # noqa: E731
                 Finding(self.name, ctx.rel, n.lineno, n.col_offset, msg))
             if full in _NONDET:
+                if full in _WALLCLOCK and wallclock_ok:
+                    continue
                 if not MEASUREMENT_RE.search(ctx.comment(node.lineno)):
                     emit(f"`{full}()` is {_NONDET[full]} — nondeterministic "
                          "in the replayable core; use time.perf_counter for "

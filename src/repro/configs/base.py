@@ -366,6 +366,9 @@ class RuntimeConfig:
     #                               per round (speedup bench)
     deadline_s: float = 300.0     # internal-only: hard wall for the whole
     #                               federation, derived from --steps
+    trace_dir: Optional[str] = None   # flag: --trace — per-process JSONL
+    #                               trace capture dir (repro/obs); None =
+    #                               tracing off (the bitwise-default)
 
 
 @dataclass(frozen=True)

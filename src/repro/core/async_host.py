@@ -53,6 +53,7 @@ from repro.core.vfl import VFLModel
 from repro.kernels import fused_round
 from repro.core.wire import (SERVER, Channel, InMemoryChannel, Message,
                              party, party_index)
+from repro.obs import maybe_tracer, trace
 from repro.utils.prng import fold_name
 
 # This container has ONE core: concurrent XLA-CPU executions from many
@@ -241,7 +242,13 @@ class PartyRoundPrep:
 def party_round_prepare(model, vfl: VFLConfig, ex: ZOExchange, w_m, X,
                         idx, key, m: int) -> PartyRoundPrep:
     """Perturb/evaluate locally and encode the up-link payloads (the
-    compute half of Algorithm 1's party round — no wire crossing)."""
+    compute half of Algorithm 1's party round — no wire crossing).
+    Span: ``party_prepare`` — the release-jit dispatch time."""
+    with trace("party_prepare", party=int(m)):
+        return _party_round_prepare(model, vfl, ex, w_m, X, idx, key, m)
+
+
+def _party_round_prepare(model, vfl, ex, w_m, X, idx, key, m):
     idx = np.asarray(idx)
     if vfl.num_directions == 1:
         with _JAX_LOCK:
@@ -370,9 +377,24 @@ class _Server:
         delivered loss_down Message carrying the (h, h_bar_1..K) scalars.
         Byte accounting: up = measured size of the encoded payloads
         (metered at encode_up AND per-kind on the channel), down =
-        (1+K) scalars per ROUND (batch-mean losses)."""
+        (1+K) scalars per ROUND (batch-mean losses).
+
+        Span: ``server_handle`` keyed on the PARTY round (``msg_c.round``)
+        so the collector can join it against the party's own spans and
+        the c_up crossing; a defended round also charges its releases
+        (1 + K) to the tracer's epsilon-spend accountant."""
         if isinstance(msg_c_hats, Message):
             msg_c_hats = (msg_c_hats,)
+        with trace("server_handle", party=party_index(msg_c.sender),
+                   round=int(msg_c.round)):
+            down = self._handle(msg_c, msg_c_hats, update_w0)
+        tr = maybe_tracer()
+        if tr is not None:
+            tr.dp_round(self.ex.dp, releases=1 + len(msg_c_hats),
+                        party=party_index(msg_c.sender))
+        return down
+
+    def _handle(self, msg_c: Message, msg_c_hats, update_w0: bool):
         m = party_index(msg_c.sender)
         idx = msg_c.meta["idx"]
         with self.lock:
@@ -513,18 +535,19 @@ class HostAsyncTrainer:
         the TCP runtime runs the identical math."""
         rnd = self._party_round[m]
         self._party_round[m] += 1
-        prep = party_round_prepare(self.model, self.vfl, self.exchange,
-                                   self.party_w[m], self.X, idx, key, m)
-        # simulated local compute cost (scales with the block dim)
-        t = self.compute_cost_s * self.straggler.get(m, 1.0)
-        if t > 0:
-            time.sleep(t)
-        msg_c, msg_hats = party_round_messages(self.channel, m, rnd, idx,
-                                               prep)
-        down = self.server.handle(msg_c, msg_hats)
-        self.party_w[m] = party_round_apply(self.vfl, self.exchange,
-                                            self.party_w[m], prep,
-                                            down.scalars())
+        with trace("party_round", party=int(m), round=int(rnd)):
+            prep = party_round_prepare(self.model, self.vfl, self.exchange,
+                                       self.party_w[m], self.X, idx, key, m)
+            # simulated local compute cost (scales with the block dim)
+            t = self.compute_cost_s * self.straggler.get(m, 1.0)
+            if t > 0:
+                time.sleep(t)
+            msg_c, msg_hats = party_round_messages(self.channel, m, rnd,
+                                                   idx, prep)
+            down = self.server.handle(msg_c, msg_hats)
+            self.party_w[m] = party_round_apply(self.vfl, self.exchange,
+                                                self.party_w[m], prep,
+                                                down.scalars())
 
     def _party_update(self, m: int, rng: np.random.Generator):
         idx, key = draw_round(rng, len(self.y), self.batch_size)

@@ -55,6 +55,12 @@ import numpy as np
 
 from repro.configs.base import NetworkConfig
 from repro.core.exchange import SCALAR_BYTES, wire_nbytes
+from repro.obs import maybe_tracer
+
+# per-thread observe() nesting depth: >0 while routing a RECEIVED message
+# through a channel stack (multi-process endpoints re-account incoming
+# traffic locally; the flag keeps the merged trace single-counted)
+_OBSERVING = threading.local()
 
 # serve_down is appended at the END: the TCP transport versions kinds by
 # tuple index (transport.KINDS.index), so existing frames keep their codes
@@ -226,6 +232,18 @@ class Channel:
 
     # -- accounting ---------------------------------------------------------
     def _account(self, msg: Message, transit_s: float) -> None:
+        # every concrete send path funnels through here exactly once per
+        # LOCAL crossing (RecordingChannel proxies to its inner channel),
+        # so this is THE wire trace point: it observes the already-built
+        # message and the priced transit — it can't change a byte of
+        # either. In the multi-process runtime both endpoints account
+        # the same crossing (sender via send, receiver via observe); the
+        # observed flag lets the merged federation-wide view count each
+        # crossing once while keeping both endpoints' local counters.
+        tr = maybe_tracer()
+        if tr is not None:
+            tr.wire(self.name, msg, transit_s,
+                    observed=bool(getattr(_OBSERVING, "depth", 0)))
         with self._lock:
             self.sent += 1
             self.bytes_by_kind[msg.kind] = (
@@ -264,8 +282,14 @@ class Channel:
         (repro/runtime) each endpoint owns its own stack and routes
         incoming socket messages through it with this alias — the
         endpoint's accounting and RecordingChannel transcript then match
-        the simulated single-channel view of its links exactly."""
-        return self.send(msg)
+        the simulated single-channel view of its links exactly. The
+        thread-local observe depth marks the trace record so the merged
+        view can tell a receipt from the original send."""
+        _OBSERVING.depth = getattr(_OBSERVING, "depth", 0) + 1
+        try:
+            return self.send(msg)
+        finally:
+            _OBSERVING.depth -= 1
 
 
 class InMemoryChannel(Channel):

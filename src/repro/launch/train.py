@@ -58,8 +58,8 @@ from repro.configs import INPUT_SHAPES, VFLConfig, get_config
 from repro.data.synthetic import make_lm_dataset
 from repro.launch import steps as step_lib
 from repro.models import build_model
+from repro.obs.metrics import ObsMetricLogger
 from repro.optim.schedules import make_schedule
-from repro.utils.logging import MetricLogger
 
 
 def parse_args(argv=None):
@@ -137,6 +137,13 @@ def parse_args(argv=None):
                    help="per-party LRU answer-cache capacity, keyed "
                         "(sample id, params version) (default "
                         "ServingConfig.cache_entries); requires --serve")
+    p.add_argument("--trace", default=None, metavar="DIR",
+                   help="capture per-process JSONL traces under DIR "
+                        "(repro/obs; docs/observability.md) — spans, wire "
+                        "crossings, heartbeat RTT, epsilon spend. Tracing "
+                        "is bitwise-invisible: the run's math, RNG "
+                        "streams, and wire bytes are untouched. Merge "
+                        "with `python -m repro.obs DIR`")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--resume", action="store_true",
@@ -277,7 +284,8 @@ def run_tcp(args, cfg, log):
     # default 300 s hard wall would kill any long run; 2 s per round
     # comfortably covers socket round-trips + per-process jit compiles
     cfg_rt = RuntimeConfig(
-        deadline_s=max(300.0, 120.0 + 2.0 * args.steps * args.parties))
+        deadline_s=max(300.0, 120.0 + 2.0 * args.steps * args.parties),
+        trace_dir=args.trace)
     res = run_federation(spec, rounds=args.steps, plan=plan, cfg=cfg_rt,
                          ckpt_root=args.ckpt_dir, resume=args.resume)
     h = history_losses(res)
@@ -325,7 +333,8 @@ def run_serve(args, cfg, log):
         from repro.configs import RuntimeConfig
         from repro.runtime.serving import run_tcp_serving
         cfg_rt = RuntimeConfig(
-            deadline_s=max(300.0, 120.0 + 0.1 * sc.requests))
+            deadline_s=max(300.0, 120.0 + 0.1 * sc.requests),
+            trace_dir=args.trace)
         res = run_tcp_serving(spec, sample_ids, cfg=cfg_rt, slots=sc.slots,
                               cache_entries=sc.cache_entries,
                               ckpt_root=args.ckpt_dir)
@@ -363,14 +372,20 @@ def run_serve(args, cfg, log):
 def main(argv=None):
     args = parse_args(argv)
     cfg = get_config(args.arch, reduced=args.reduced)
+    if args.trace:
+        # the launcher process's own tracer (metric records + any
+        # in-process executor spans); spawned tcp children configure
+        # themselves from RuntimeConfig.trace_dir via the harness env var
+        from repro import obs
+        obs.configure(args.trace, role="launch")
     if args.serve is not None:
         return run_serve(args, cfg,
-                         MetricLogger(f"serve:{args.arch}:vfl-zoo"))
+                         ObsMetricLogger(f"serve:{args.arch}:vfl-zoo"))
     if args.transport == "tcp":
         return run_tcp(args, cfg,
-                       MetricLogger(f"train:{args.arch}:vfl-zoo-tcp"))
+                       ObsMetricLogger(f"train:{args.arch}:vfl-zoo-tcp"))
     model = build_model(cfg)
-    log = MetricLogger(f"train:{args.arch}:{args.mode}")
+    log = ObsMetricLogger(f"train:{args.arch}:{args.mode}")
     key = jax.random.key(args.seed)
     n = max(64, args.batch_size * 8)
     data = make_batch_arrays(cfg, n, args.seq_len, args.seed)

@@ -1,0 +1,85 @@
+"""Out-of-band observability for the federation (docs/observability.md).
+
+Two entry points are approved for use inside the scoped subsystems
+(core / runtime / dp / kernels — enforced by zvlint's obs-discipline
+rule), both free when tracing is off:
+
+  with obs.trace("party_round", party=m, round=rnd): ...
+      — a span, or a shared no-op context manager when no tracer is
+        configured (one cached None check, no allocation)
+
+  tr = obs.maybe_tracer()
+  if tr is not None: tr.counter("reply_cache_hit", party=m)
+      — the process tracer handle, or None
+
+``configure(dir, role=...)`` is the explicit switch for unscoped code
+(launch/train.py, tests, benchmarks); ``configure(None)`` flushes and
+disables. Spawned children self-configure lazily: the runtime harness
+exports ``REPRO_TRACE_DIR`` before spawning, and the child's first
+``maybe_tracer()`` call opens its own trace file with a role derived
+from the multiprocessing process name. Merge the per-process files with
+``python -m repro.obs <dir>``.
+"""
+from __future__ import annotations
+
+import atexit
+import contextlib
+import os
+import threading
+from typing import Optional
+
+from repro.obs.tracer import Tracer
+
+__all__ = ["Tracer", "configure", "maybe_tracer", "trace", "ENV_VAR"]
+
+ENV_VAR = "REPRO_TRACE_DIR"
+
+_LOCK = threading.Lock()
+_UNSET = object()            # "not yet resolved from the environment"
+_tracer = _UNSET
+_NULL_SPAN = contextlib.nullcontext()   # shared: nullcontext is stateless
+
+
+def configure(out_dir: Optional[str], role: Optional[str] = None):
+    """Install (or, with ``out_dir=None``, tear down) this process's
+    tracer. Returns the new tracer or None. The previous tracer, if any,
+    is flushed and closed."""
+    global _tracer
+    with _LOCK:
+        if _tracer is not _UNSET and _tracer is not None:
+            _tracer.close()
+        _tracer = Tracer(out_dir, role=role) if out_dir else None
+        return _tracer
+
+
+def maybe_tracer() -> Optional[Tracer]:
+    """The process tracer, or None when tracing is off. First call in a
+    process that was never ``configure``d resolves ``REPRO_TRACE_DIR``
+    once and caches the answer — the steady-state cost of a disabled
+    trace point is this single attribute read."""
+    global _tracer
+    t = _tracer
+    if t is not _UNSET:
+        return t
+    with _LOCK:
+        if _tracer is _UNSET:
+            out_dir = os.environ.get(ENV_VAR)
+            _tracer = Tracer(out_dir) if out_dir else None
+        return _tracer
+
+
+def trace(name: str, **attrs):
+    """A span context manager, or a shared no-op when tracing is off."""
+    t = maybe_tracer()
+    if t is None:
+        return _NULL_SPAN
+    return t.span(name, **attrs)
+
+
+@atexit.register
+def _flush_at_exit() -> None:
+    # mp 'spawn' children exit through the normal interpreter shutdown,
+    # so their buffered tail reaches disk even without an explicit close
+    t = _tracer
+    if t is not _UNSET and t is not None:
+        t.close()

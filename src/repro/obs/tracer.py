@@ -1,0 +1,251 @@
+"""Per-process tracer: monotonic spans + counters/gauges/histograms into
+an in-memory buffer, flushed as a JSONL trace file (one per process).
+
+Bitwise invisibility is the design constraint, not an aspiration: the
+tracer only ever READS clocks (``time.monotonic`` for every record
+timestamp; one ``time.time`` at construction as the cross-process merge
+anchor) and writes to its own file — it never touches an RNG stream, a
+``Message`` payload, a ``Message.meta`` dict, or the ``wire_nbytes``
+accounting, so a traced run is bit-identical to an untraced one on every
+transport (pinned in tests/test_obs.py). The wall-clock read is why
+``src/repro/obs`` carries a zvlint module policy instead of per-line
+suppressions (analysis/rules_rng.py): records are out-of-band by
+construction and never feed back into computation.
+
+Record schema (one JSON object per line):
+
+  {"ev": "meta", "role", "pid", "t0_unix", "t0_mono"}    file header —
+      the (wall, monotonic) pair the collector uses to place this
+      process's monotonic offsets on one shared wall-clock axis
+  {"ev": "span", "name", "ts", "dur", "tid", ...attrs}   closed span
+  {"ev": "wire", "channel", "kind", "sender", "receiver", "round",
+   "nbytes", "transit_s", "observed", "ts"}              one crossing
+      (observed=True: a receiver re-accounting incoming traffic)
+  {"ev": "counter" | "gauge" | "histo", "name", "value", "ts", ...attrs}
+  {"ev": "metric", "name", "step", "ts", ...metrics}     logger record
+
+Identities, not baggage: joins across processes ride the protocol's own
+``(party, round)`` / ``(sender, receiver, round)`` coordinates that the
+instrumented seams already know — no trace context is ever attached to a
+Message (``ReplayChannel`` asserts meta equality; smuggling span ids
+through ``meta`` would break replay and transcript parity).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Optional
+
+
+def _jsonable(v):
+    """json.dumps default hook: numpy scalars -> python, rest -> repr."""
+    item = getattr(v, "item", None)
+    if callable(item):
+        try:
+            return item()
+        except (TypeError, ValueError):
+            pass
+    return str(v)
+
+
+class _Span:
+    """Context manager for one span; emitted on exit (exceptions too —
+    a span that died is still time that passed)."""
+
+    __slots__ = ("_tracer", "_name", "_attrs", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict):
+        self._tracer = tracer
+        self._name = name
+        self._attrs = attrs
+
+    def __enter__(self) -> "_Span":
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        t1 = time.monotonic()
+        rec = {"ev": "span", "name": self._name, "ts": self._t0,
+               "dur": t1 - self._t0, "tid": threading.get_ident()}
+        rec.update(self._attrs)
+        self._tracer._emit(rec)
+        return False
+
+
+class Tracer:
+    """One process's trace sink. Construct via ``repro.obs.configure``
+    (or let ``maybe_tracer`` auto-configure from ``REPRO_TRACE_DIR`` in
+    spawned children) — scoped code (core/runtime/dp/kernels) must only
+    reach it through ``obs.trace(...)`` / ``obs.maybe_tracer()``
+    (enforced by zvlint's obs-discipline rule)."""
+
+    def __init__(self, out_dir: str, role: Optional[str] = None,
+                 flush_every: int = 256):
+        os.makedirs(out_dir, exist_ok=True)
+        self.role = _sanitize(role or _default_role())
+        self.pid = os.getpid()
+        self.path = os.path.join(out_dir,
+                                 f"trace-{self.role}-{self.pid}.jsonl")
+        self.flush_every = int(flush_every)
+        # reentrant: dp_round emits a gauge (which takes the lock again)
+        # while holding it around the accountant update
+        self._lock = threading.RLock()
+        self._buf: list[dict] = []
+        self._file = open(self.path, "a")
+        self._closed = False
+        # the merge anchor: ONE wall-clock read per process; every other
+        # timestamp in the file is monotonic
+        self.t0_unix = time.time()
+        self.t0_mono = time.monotonic()
+        self._pings: dict = {}        # peer -> FIFO of ping send times
+        self._dp: dict = {}           # party -> [accountant, releases]
+        self._dp_curve = None         # one release's RDP curve (cached)
+        self._emit({"ev": "meta", "role": self.role, "pid": self.pid,
+                    "t0_unix": self.t0_unix, "t0_mono": self.t0_mono})
+
+    # -- record sinks -------------------------------------------------------
+    def _emit(self, rec: dict) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._buf.append(rec)
+            if len(self._buf) >= self.flush_every:
+                self._flush_locked()
+
+    def span(self, name: str, **attrs) -> _Span:
+        return _Span(self, name, attrs)
+
+    def counter(self, name: str, value: float = 1, **attrs) -> None:
+        rec = {"ev": "counter", "name": name, "value": value,
+               "ts": time.monotonic()}
+        rec.update(attrs)
+        self._emit(rec)
+
+    def gauge(self, name: str, value: float, **attrs) -> None:
+        rec = {"ev": "gauge", "name": name, "value": value,
+               "ts": time.monotonic()}
+        rec.update(attrs)
+        self._emit(rec)
+
+    def histo(self, name: str, value: float, **attrs) -> None:
+        rec = {"ev": "histo", "name": name, "value": value,
+               "ts": time.monotonic()}
+        rec.update(attrs)
+        self._emit(rec)
+
+    def wire(self, channel_name: str, msg, transit_s: float,
+             observed: bool = False) -> None:
+        """One boundary crossing as the channel accounted it — kind,
+        endpoints, round, measured bytes, and the NetworkChannel's priced
+        transit attribution (0.0 on free transports). ``observed=True``
+        marks a RECEIVING endpoint re-accounting incoming traffic
+        through its local stack (multi-process runtime): the merged view
+        counts bytes from send-side records only, so federation totals
+        match the single-channel accounting exactly."""
+        self._emit({"ev": "wire", "channel": channel_name,
+                    "kind": msg.kind, "sender": msg.sender,
+                    "receiver": msg.receiver, "round": int(msg.round),
+                    "nbytes": int(msg.nbytes),
+                    "transit_s": float(transit_s),
+                    "observed": bool(observed),
+                    "ts": time.monotonic()})
+
+    # -- heartbeat RTT ------------------------------------------------------
+    # Pings and pongs are 1:1 and in-order per socket (the receiver
+    # answers each ping inline), so a local FIFO of send times measures
+    # RTT without touching the control frames — the wire stays
+    # byte-identical to an untraced run.
+    def ping_sent(self, peer) -> None:
+        with self._lock:
+            self._pings.setdefault(peer, []).append(time.monotonic())
+
+    def pong_received(self, peer) -> None:
+        with self._lock:
+            fifo = self._pings.get(peer)
+            if not fifo:
+                return                      # unmatched pong: drop, not lie
+            t0 = fifo.pop(0)
+        self.histo("heartbeat_rtt_s", time.monotonic() - t0,
+                   peer=str(peer))
+
+    # -- dp budget ----------------------------------------------------------
+    def dp_round(self, dp, releases: int, party=None) -> None:
+        """Charge one defended round's releases to a shadow accountant
+        and emit the cumulative epsilon spend. Accounting is PER PARTY —
+        the calibration target (``resolve_dp``) is a per-party budget
+        over the run, so each party's uploads spend their own ledger.
+        The per-release RDP curve is computed once (sigma is constant
+        over a run); the per-round cost is a vector axpy + the epsilon
+        conversion."""
+        if dp is None or not getattr(dp, "enabled", False):
+            return
+        sigma = dp.noise_multiplier
+        if not sigma:
+            return
+        with self._lock:
+            if self._dp_curve is None:
+                from repro.dp.accountant import RDPAccountant
+                probe = RDPAccountant(dp.mechanism)
+                rate = dp.sample_rate if dp.sample_rate is not None else 1.0
+                probe.step(sigma, 1, sample_rate=rate)
+                self._dp_curve = probe._rdp.copy()   # one release's curve
+            entry = self._dp.get(party)
+            if entry is None:
+                from repro.dp.accountant import RDPAccountant
+                entry = self._dp[party] = [RDPAccountant(dp.mechanism), 0]
+            acct, _ = entry
+            acct._rdp = acct._rdp + releases * self._dp_curve
+            entry[1] += int(releases)
+            eps = acct.epsilon(dp.delta)
+            n = entry[1]
+        attrs = {"releases": n}
+        if party is not None:
+            attrs["party"] = party
+        self.gauge("dp_epsilon", eps, **attrs)
+
+    # -- structured metric lines --------------------------------------------
+    def metric(self, name: str, step: int, metrics: dict) -> None:
+        rec = {"ev": "metric", "name": name, "step": int(step),
+               "ts": time.monotonic()}
+        for k, v in metrics.items():
+            try:
+                rec[k] = float(v)
+            except (TypeError, ValueError):
+                rec[k] = str(v)
+        self._emit(rec)
+
+    # -- lifecycle ----------------------------------------------------------
+    def _flush_locked(self) -> None:
+        if self._buf:
+            self._file.write("".join(
+                json.dumps(r, default=_jsonable) + "\n" for r in self._buf))
+            self._file.flush()
+            self._buf = []
+
+    def flush(self) -> None:
+        with self._lock:
+            if not self._closed:
+                self._flush_locked()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._flush_locked()
+            self._closed = True
+            self._file.close()
+
+
+def _default_role() -> str:
+    """The process's role label: multiprocessing process names carry the
+    federation topology ('fed-server', 'fed-party0', 'serve-party1');
+    the parent's 'MainProcess' collapses to 'main'."""
+    import multiprocessing
+    name = multiprocessing.current_process().name
+    return "main" if name == "MainProcess" else name
+
+
+def _sanitize(role: str) -> str:
+    return "".join(c if (c.isalnum() or c == "-") else "-" for c in role)

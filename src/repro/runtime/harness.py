@@ -72,6 +72,14 @@ def run_federation(spec: dict, rounds: int, *,
     spec = resolve_spec_dp(spec, rounds)
     q = int(spec.get("parties", 2))
     _ensure_child_pythonpath()
+    # trace capture rides the same env-var channel PYTHONPATH does: each
+    # spawned child lazily opens its own trace file on its first
+    # obs.maybe_tracer() call (role = its mp process name); restored in
+    # the finally below so one traced federation can't leak capture into
+    # later runs in this interpreter
+    prev_trace = os.environ.get("REPRO_TRACE_DIR")
+    if cfg.trace_dir:
+        os.environ["REPRO_TRACE_DIR"] = cfg.trace_dir
     ctx = mp.get_context("spawn")
     port_q = ctx.Queue()
     result_q = ctx.Queue()
@@ -177,6 +185,11 @@ def run_federation(spec: dict, rounds: int, *,
             p.join(timeout=10.0)
         return results
     finally:
+        if cfg.trace_dir:
+            if prev_trace is None:
+                os.environ.pop("REPRO_TRACE_DIR", None)
+            else:
+                os.environ["REPRO_TRACE_DIR"] = prev_trace
         _terminate(list(procs.values()) + [server_proc])
 
 

@@ -33,6 +33,7 @@ from repro.checkpoint import (available_steps, restore_checkpoint,
 from repro.configs.base import RuntimeConfig
 from repro.core.exchange import CommsMeter, ZOExchange
 from repro.core.wire import InMemoryChannel
+from repro.obs import maybe_tracer, trace
 from repro.runtime.failures import CRASH_EXIT_CODE, PartyFault
 from repro.runtime.problem import build_problem
 from repro.runtime.transport import (ConnectionClosed, FramedSocket,
@@ -40,11 +41,17 @@ from repro.runtime.transport import (ConnectionClosed, FramedSocket,
                                      connect_with_retry)
 
 
-def _recv_reply(fsock: FramedSocket, cfg: RuntimeConfig):
+def _recv_reply(fsock: FramedSocket, cfg: RuntimeConfig, peer="server"):
     """Wait for the round's loss_down, pinging every ``heartbeat_s``
     while it is late; answered pongs confirm liveness and do NOT consume
     the wait budget — the hard bound is ``request_timeout_s *
-    max_retries`` of total silence-or-waiting, whichever comes first."""
+    max_retries`` of total silence-or-waiting, whichever comes first.
+
+    Each ping/pong pair is RTT-timed through the tracer's local FIFO
+    (pings and pongs are 1:1 and in-order on this socket) — the control
+    frames themselves are untouched, so traced and untraced runs put
+    identical bytes on the wire."""
+    tr = maybe_tracer()
     deadline = time.monotonic() + cfg.request_timeout_s * cfg.max_retries
     while True:
         remaining = deadline - time.monotonic()
@@ -55,10 +62,14 @@ def _recv_reply(fsock: FramedSocket, cfg: RuntimeConfig):
             frame_type, obj = fsock.recv(
                 timeout=min(cfg.heartbeat_s, remaining))
         except TransportTimeout:
+            if tr is not None:
+                tr.ping_sent(peer)
             fsock.send_control({"type": "ping"})   # probe; keep waiting
             continue
         if frame_type == "ctl":
             if obj.get("type") == "pong":
+                if tr is not None:
+                    tr.pong_received(peer)
                 continue
             raise TransportError(f"unexpected control frame {obj!r}")
         if obj.kind != "loss_down":
@@ -121,24 +132,29 @@ def party_main(spec: dict, m: int, port: int, rounds: int,
                     and not resume):
                 # scripted abrupt death: no goodbye, no checkpoint flush
                 os._exit(CRASH_EXIT_CODE)
-            idx, key = async_host.draw_round(rng, n, prob.batch_size)
-            prep = async_host.party_round_prepare(model, vfl, ex, w_m,
-                                                  prob.X, idx, key, m)
-            if cfg.compute_cost_s > 0:
-                time.sleep(cfg.compute_cost_s)
-            if fault is not None and fault.slow_send_s > 0:
-                time.sleep(fault.slow_send_s)      # straggler link
-            msg_c, msg_hats = async_host.party_round_messages(
-                channel, m, rnd, idx, prep)
-            fsock.send_message(msg_c)
-            for msg in msg_hats:
-                fsock.send_message(msg)
-            reply = channel.observe(_recv_reply(fsock, cfg))
-            w_m = async_host.party_round_apply(vfl, ex, w_m, prep,
-                                               reply.scalars())
-            if ckpt_dir is not None and (rnd + 1) % cfg.ckpt_every == 0:
-                save_checkpoint(ckpt_dir, rnd + 1, w_m,
-                                {"party": m, "round": rnd + 1})
+            with trace("party_round", party=int(m), round=int(rnd)):
+                idx, key = async_host.draw_round(rng, n, prob.batch_size)
+                prep = async_host.party_round_prepare(model, vfl, ex, w_m,
+                                                      prob.X, idx, key, m)
+                if cfg.compute_cost_s > 0:
+                    time.sleep(cfg.compute_cost_s)
+                if fault is not None and fault.slow_send_s > 0:
+                    time.sleep(fault.slow_send_s)      # straggler link
+                msg_c, msg_hats = async_host.party_round_messages(
+                    channel, m, rnd, idx, prep)
+                fsock.send_message(msg_c)
+                for msg in msg_hats:
+                    fsock.send_message(msg)
+                with trace("party_wait_reply", party=int(m),
+                           round=int(rnd)):
+                    raw = _recv_reply(fsock, cfg)
+                reply = channel.observe(raw)
+                with trace("party_apply", party=int(m), round=int(rnd)):
+                    w_m = async_host.party_round_apply(vfl, ex, w_m, prep,
+                                                       reply.scalars())
+                if ckpt_dir is not None and (rnd + 1) % cfg.ckpt_every == 0:
+                    save_checkpoint(ckpt_dir, rnd + 1, w_m,
+                                    {"party": m, "round": rnd + 1})
 
         if ckpt_dir is not None and rounds % cfg.ckpt_every != 0:
             save_checkpoint(ckpt_dir, rounds, w_m,
@@ -164,6 +180,11 @@ def party_main(spec: dict, m: int, port: int, rounds: int,
         "socket_bytes_in": fsock.bytes_in,
         "final_w": {k: np.asarray(v) for k, v in w_m.items()},
     }
+    tr = maybe_tracer()
+    if tr is not None:
+        # the harness may SIGTERM this process right after reading the
+        # result (skipping atexit) — get the trace tail to disk first
+        tr.flush()
     if result_q is not None:
         result_q.put(("party", result))
     return result

@@ -53,6 +53,7 @@ from repro.configs.base import RuntimeConfig
 from repro.core.exchange import CommsMeter, ZOExchange
 from repro.core.wire import (InMemoryChannel, NetworkChannel,
                              RecordingChannel)
+from repro.obs import maybe_tracer, trace
 from repro.runtime.problem import build_problem
 from repro.runtime.transport import (ConnectionClosed, FramedSocket,
                                      TransportError, TransportTimeout)
@@ -307,6 +308,9 @@ class RuntimeServer:
                     "server state has advanced past it and cannot answer "
                     "losslessly")
             reply, sent_seq, sent_ok = self._replies[m][rnd]
+        tr = maybe_tracer()
+        if tr is not None:
+            tr.counter("reply_cache_hit", party=int(m), round=int(rnd))
         link = self._current_link(m)
         if link is None or (sent_ok and sent_seq == link.seq):
             return
@@ -318,6 +322,11 @@ class RuntimeServer:
             pass                             # it will be replayed again
 
     def _process(self, m: int, msg_c, msg_hats) -> None:
+        # span covers admission-to-reply: observe + handle + send + cache
+        with trace("server_process", party=int(m), round=int(msg_c.round)):
+            self._process_round(m, msg_c, msg_hats)
+
+    def _process_round(self, m: int, msg_c, msg_hats) -> None:
         # observe the up-link through the server's channel stack at
         # processing time: transcript/counter order equals the schedule
         # order, and replayed duplicates are never double-counted
@@ -406,6 +415,8 @@ class RuntimeServer:
         total = self.rounds * self.q
         tau = self.cfg.max_staleness
         parked: dict[int, tuple] = {}          # party -> (seq, rnd, c, hats)
+        park_t0: dict[int, float] = {}         # party -> parking start
+        tr = maybe_tracer()
 
         def staleness(rnd: int) -> int:
             return rnd - min(self._processed)
@@ -416,6 +427,10 @@ class RuntimeServer:
             for pm in sorted(parked, key=lambda p: parked[p][1]):
                 if staleness(parked[pm][1]) <= tau:
                     item = (pm,) + parked.pop(pm)
+                    if tr is not None:
+                        tr.histo("parked_s",
+                                 time.monotonic() - park_t0.pop(pm),
+                                 party=int(pm), round=int(item[2]))
                     break
             if item is None:
                 item = self._pop(self._global_inbox)
@@ -432,9 +447,13 @@ class RuntimeServer:
                     f"expected {self._processed[m]}")
             if tau is not None and staleness(rnd) > tau:
                 parked[m] = (seq, rnd, msg_c, hats)
+                park_t0[m] = time.monotonic()
                 self._parked_events += 1
                 continue
             self._staleness_max = max(self._staleness_max, staleness(rnd))
+            if tr is not None:
+                tr.histo("staleness", staleness(rnd),
+                         party=int(m), round=int(rnd))
             self._process(m, msg_c, hats)
 
     # -- run ---------------------------------------------------------------
@@ -515,6 +534,11 @@ def server_main(spec: dict, rounds: int, cfg: RuntimeConfig,
         server = RuntimeServer(spec, rounds, cfg, channel_kind=channel_kind,
                                ckpt_dir=ckpt_dir, resume=resume)
         result = server.serve(port_cb=port_q.put)
+        tr = maybe_tracer()
+        if tr is not None:
+            # the harness may SIGTERM us right after reading the result
+            # (skipping atexit) — get the trace tail to disk first
+            tr.flush()
         result_q.put(("server", result))
     except BaseException as e:  # noqa: BLE001 — report, then die loudly
         import traceback

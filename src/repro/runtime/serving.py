@@ -35,6 +35,7 @@ import numpy as np
 from repro.configs.base import RuntimeConfig
 from repro.core.exchange import ZOExchange
 from repro.core.wire import InMemoryChannel, Message
+from repro.obs import maybe_tracer, trace
 from repro.runtime.harness import _ensure_child_pythonpath, _terminate
 from repro.runtime.problem import build_problem
 from repro.runtime.server import FederationError, make_channel
@@ -96,8 +97,10 @@ def serving_party_main(spec: dict, m: int, port: int, cfg: RuntimeConfig,
             if msg.round in replies:          # re-delivered query round:
                 reply = replies[msg.round]    # answer from the cache
             else:
-                reply = channel.send(answer_serve_query(
-                    model, m, w_m, prob.X, ex, msg, version=version))
+                with trace("serve_answer", party=int(m),
+                           round=int(msg.round)):
+                    reply = channel.send(answer_serve_query(
+                        model, m, w_m, prob.X, ex, msg, version=version))
                 replies[msg.round] = reply
                 served += len(np.asarray(msg.payload).reshape(-1))
             fsock.send_message(reply)
@@ -118,6 +121,9 @@ def serving_party_main(spec: dict, m: int, port: int, cfg: RuntimeConfig,
         "socket_bytes_out": fsock.bytes_out,
         "socket_bytes_in": fsock.bytes_in,
     }
+    tr = maybe_tracer()
+    if tr is not None:
+        tr.flush()     # before the result triggers parent-side terminate
     if result_q is not None:
         result_q.put(("party", result))
     return result
@@ -161,10 +167,16 @@ class RemotePartyBackend:
                 frame_type, obj = self.fsock.recv(
                     timeout=min(cfg.heartbeat_s, remaining))
             except TransportTimeout:
+                tr = maybe_tracer()
+                if tr is not None:
+                    tr.ping_sent(self.m)
                 self.fsock.send_control({"type": "ping"})
                 continue
             if frame_type == "ctl":
                 if obj.get("type") == "pong":
+                    tr = maybe_tracer()
+                    if tr is not None:
+                        tr.pong_received(self.m)
                     continue
                 raise TransportError(f"unexpected control frame {obj!r}")
             if obj.kind != "c_up":
@@ -227,6 +239,11 @@ def run_tcp_serving(spec: dict, sample_ids, *,
     w0 = model.init_server(server_key)
 
     _ensure_child_pythonpath()
+    # same env-var propagation as the training harness: spawned serving
+    # parties lazily open their own trace files when capture is on
+    prev_trace = os.environ.get("REPRO_TRACE_DIR")
+    if cfg.trace_dir:
+        os.environ["REPRO_TRACE_DIR"] = cfg.trace_dir
     ctx = mp.get_context("spawn")
     result_q = ctx.Queue()
 
@@ -283,6 +300,11 @@ def run_tcp_serving(spec: dict, sample_ids, *,
             "parties": parties,
         }
     finally:
+        if cfg.trace_dir:
+            if prev_trace is None:
+                os.environ.pop("REPRO_TRACE_DIR", None)
+            else:
+                os.environ["REPRO_TRACE_DIR"] = prev_trace
         server_sock.close()
         if engine is not None:
             engine.close()

@@ -50,6 +50,7 @@ from repro.core.comms import (CODEC_MSG_OVERHEAD, CODEC_VALUE_BYTES,
                               validate_serving_channel)
 from repro.core.exchange import ZOExchange
 from repro.core.wire import SERVER, Channel, InMemoryChannel, Message, party
+from repro.obs import maybe_tracer, trace
 
 
 # ------------------------------------------------------- per-sample math --
@@ -277,6 +278,24 @@ class FederatedServingEngine:
                     if r is not None]
         if not occupied:
             return
+        with trace("serve_step", round=int(self.steps),
+                   occupied=len(occupied)):
+            crossings = self._step_round(occupied)
+        tr = maybe_tracer()
+        if tr is not None:
+            # slot occupancy + per-crossing amortization: users served
+            # this step over the wire crossings that paid for them (one
+            # serve_down + one batched c_up per issued party; zero when
+            # every answer came from cache)
+            rnd = self.steps - 1
+            tr.gauge("serve_slots_occupied", len(occupied), step=rnd)
+            tr.gauge("serve_crossings", crossings, step=rnd)
+            tr.gauge("serve_users_per_crossing",
+                     len(occupied) / max(crossings, 1), step=rnd)
+            tr.gauge("serve_cache_hits_total",
+                     sum(c.hits for c in self.caches), step=rnd)
+
+    def _step_round(self, occupied) -> int:
         rnd = self.steps
         codec = self.ex.codec.name
         # phase 1 — cache resolve + async issue: every party's query goes
@@ -340,6 +359,7 @@ class FederatedServingEngine:
             self.completed.append(req)
             self.active[s] = None
         self.steps += 1
+        return 2 * len(issued)
 
     # ------------------------------------------------------- reporting ---
     def validate_wire(self) -> dict:

@@ -1,0 +1,13 @@
+# obs-discipline fixture (CLEAN): the approved shape — scoped code
+# imports exactly trace/maybe_tracer and asks for the handle, never
+# installs one.
+from repro.obs import maybe_tracer, trace
+
+
+def handle(self, msg):
+    with trace("server_handle", party=0, round=int(msg.round)):
+        out = self._handle(msg)
+    tr = maybe_tracer()
+    if tr is not None:
+        tr.counter("reply_cache_hit", party=0)
+    return out

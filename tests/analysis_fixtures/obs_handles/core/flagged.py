@@ -1,0 +1,15 @@
+# obs-discipline fixture (FLAGGED): a scoped module reaching past the
+# two approved tracer entry points — every shape below lets library
+# code see obs internals or flip tracing on for the whole process.
+import repro.obs                              # module-handle import
+from repro import obs                         # alias of the same handle
+from repro.obs import configure, trace        # configure not approved
+from repro.obs.tracer import Tracer           # deep internal import
+
+
+def handle(self, msg):
+    configure("/tmp/traces")                  # library code flips tracing
+    tr = Tracer("/tmp/traces")                # hand-rolled sink
+    obs.configure(None)                       # ... and off again
+    with trace("server_handle", party=0):
+        return tr

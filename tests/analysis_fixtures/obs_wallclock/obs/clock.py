@@ -1,0 +1,14 @@
+# rng-discipline module-policy fixture (CLEAN): an obs/ module reading
+# wall clocks with NO `# zvlint: measurement` annotations — the obs
+# path segment carries a wholesale wall-clock exemption because reading
+# clocks is the layer's entire job and none of it feeds computation.
+import time
+import datetime
+
+
+def anchor():
+    return time.time(), time.monotonic()
+
+
+def stamp():
+    return datetime.datetime.now()

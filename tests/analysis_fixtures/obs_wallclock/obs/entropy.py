@@ -1,0 +1,19 @@
+# rng-discipline module-policy fixture (FLAGGED): the obs exemption
+# forgives clock READS only — a tracer drawing entropy or touching the
+# process-global RNG is still a determinism hazard and stays flagged.
+import os
+import uuid
+import numpy as np
+
+
+def span_id():
+    return uuid.uuid4()                       # OS entropy: flagged
+
+
+def salt():
+    return os.urandom(8)                      # OS entropy: flagged
+
+
+def jitter(seed):
+    np.random.seed(seed)                      # legacy global: flagged
+    return np.random.default_rng()            # seedless stream: flagged

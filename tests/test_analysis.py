@@ -76,6 +76,35 @@ def test_config_flags_drift_orphan_and_noop_flag():
     assert clean.findings == []
 
 
+def test_obs_flags_every_escape_hatch_and_clean_twin_passes():
+    rep = analyze([FIX / "obs_handles"], select=["obs-discipline"])
+    bad = _for(rep, "flagged.py")
+    msgs = " | ".join(f.message for f in bad)
+    assert "import repro.obs" in msgs          # module-handle import
+    assert "from repro import obs" in msgs     # aliased module handle
+    assert "configure" in msgs                 # unapproved name import
+    assert "deep import" in msgs               # repro.obs.tracer internals
+    assert "Tracer() construction" in msgs
+    assert "flips process tracing" in msgs     # obs.configure(...) call
+    assert len(bad) == 6
+    assert _for(rep, "clean.py") == []
+
+
+def test_obs_wallclock_module_policy_forgives_clocks_not_entropy():
+    """obs/ reads wall clocks by design (every trace record is
+    timestamped), so rng-discipline exempts clock reads there without
+    per-line annotations — but entropy and process-global seeding stay
+    flagged: a tracer has no business drawing randomness."""
+    rep = analyze([FIX / "obs_wallclock"], select=["rng-discipline"])
+    assert _for(rep, "clock.py") == []         # no annotations needed
+    bad = _for(rep, "entropy.py")
+    msgs = " | ".join(f.message for f in bad)
+    assert "OS entropy" in msgs                # uuid4 / urandom
+    assert "process-global" in msgs            # np.random.seed
+    assert "no seed argument" in msgs          # seedless default_rng
+    assert len(bad) == 4
+
+
 # ----------------------------------------------- repo-clean CI gate -------
 
 def test_repo_src_is_clean_against_committed_baseline():
