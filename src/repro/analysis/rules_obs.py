@@ -22,6 +22,16 @@ Scope: files under ``core/``, ``runtime/``, ``dp/``, ``kernels/`` path
 segments — the same subsystems whose bit-parity acceptances the tracer
 must never perturb. Unscoped code (launch, tests, benchmarks, the obs
 package itself) may use the full API; ``configure`` is exactly for it.
+
+One carved-out exception for the live health plane: the PARENT-side
+entry points inside runtime/ — ``harness.py`` (training) and
+``serving.py`` (federated serving) — own the monitor collector and the
+``REPRO_MONITOR_ADDR`` env handoff to the processes they spawn, so they
+alone may deep-import ``repro.obs.monitor`` and ``repro.obs.health``.
+Everywhere else in the scoped subsystems those imports (and
+``MonitorServer(...)`` construction) stay violations: a party or server
+process that starts its own collector would observe the federation from
+inside it, and the out-of-band guarantee dies.
 """
 from __future__ import annotations
 
@@ -31,8 +41,12 @@ from pathlib import Path
 from repro.analysis.core import Finding, Rule, dotted_name, register
 
 SCOPE_PARTS = {"core", "runtime", "dp", "kernels"}
-APPROVED_NAMES = {"trace", "maybe_tracer"}
+APPROVED_NAMES = {"trace", "maybe_tracer", "MONITOR_ENV"}
 OBS_MODULE = "repro.obs"
+# parent-side entry points: the only scoped files allowed to own a
+# monitor collector (they spawn the children that stream to it)
+MONITOR_PARENT_FILES = {"harness.py", "serving.py"}
+MONITOR_MODULES = {OBS_MODULE + ".monitor", OBS_MODULE + ".health"}
 
 
 @register
@@ -40,14 +54,20 @@ class ObsDiscipline(Rule):
     name = "obs-discipline"
     scope = "file"
     description = ("core/runtime/dp/kernels may touch the tracer only via "
-                   "`from repro.obs import trace, maybe_tracer` — no "
-                   "Tracer() construction, obs.configure, module imports, "
-                   "or deep submodule imports in the scoped subsystems")
+                   "`from repro.obs import trace, maybe_tracer` (plus the "
+                   "MONITOR_ENV constant) — no Tracer()/MonitorServer() "
+                   "construction, obs.configure, module imports, or deep "
+                   "submodule imports; monitor/health deep imports are "
+                   "approved solely in runtime's parent entry points "
+                   "harness.py and serving.py")
 
     def check_file(self, ctx) -> list[Finding]:
-        parts = set(Path(ctx.rel).parts)
+        path = Path(ctx.rel)
+        parts = set(path.parts)
         if not (parts & SCOPE_PARTS):
             return []
+        monitor_parent = ("runtime" in path.parts
+                          and path.name in MONITOR_PARENT_FILES)
         out: list[Finding] = []
 
         def emit(node, msg):
@@ -67,10 +87,14 @@ class ObsDiscipline(Rule):
             elif isinstance(node, ast.ImportFrom):
                 mod = node.module or ""
                 if mod.startswith(OBS_MODULE + "."):
+                    if monitor_parent and mod in MONITOR_MODULES:
+                        continue        # parent-side collector exception
                     emit(node, f"deep import `from {mod} import ...` in "
                          "scoped code couples the core to obs internals — "
                          "only `from repro.obs import trace, maybe_tracer` "
-                         "is approved")
+                         "is approved (monitor/health additionally in the "
+                         "runtime parent entry points harness.py/"
+                         "serving.py)")
                 elif mod == OBS_MODULE:
                     for alias in node.names:
                         if alias.name not in APPROVED_NAMES:
@@ -98,6 +122,12 @@ class ObsDiscipline(Rule):
                          "configure at an entry point or auto-configured "
                          "from REPRO_TRACE_DIR; scoped code asks "
                          "maybe_tracer() for the handle")
+                elif term == "MonitorServer" and not monitor_parent:
+                    emit(node, "MonitorServer() construction in scoped "
+                         "code — only the runtime parent entry points "
+                         "(harness.py, serving.py) own a collector; a "
+                         "child process starting one would observe the "
+                         "federation from inside it")
                 elif term == "configure" and "obs" in full.split("."):
                     emit(node, f"`{full}(...)` flips process tracing from "
                          "scoped code — the on/off decision belongs to "

@@ -369,6 +369,12 @@ class RuntimeConfig:
     trace_dir: Optional[str] = None   # flag: --trace — per-process JSONL
     #                               trace capture dir (repro/obs); None =
     #                               tracing off (the bitwise-default)
+    monitor: bool = False         # flag: --monitor — live health plane:
+    #                               the parent runs an obs.monitor collector,
+    #                               children stream records to it over a
+    #                               side socket and obs.health scores them
+    #                               online (requires trace_dir; still
+    #                               bitwise-invisible to the protocol)
 
 
 @dataclass(frozen=True)

@@ -392,6 +392,12 @@ class _Server:
         if tr is not None:
             tr.dp_round(self.ex.dp, releases=1 + len(msg_c_hats),
                         party=party_index(msg_c.sender))
+            # the round's loss as a gauge: the health plane's divergence
+            # detector reads it live (scalars()[0] is h — already a
+            # float, no extra device sync)
+            tr.gauge("loss", float(down.scalars()[0]),
+                     party=party_index(msg_c.sender),
+                     round=int(msg_c.round))
         return down
 
     def _handle(self, msg_c: Message, msg_c_hats, update_w0: bool):

@@ -144,6 +144,23 @@ def parse_args(argv=None):
                         "is bitwise-invisible: the run's math, RNG "
                         "streams, and wire bytes are untouched. Merge "
                         "with `python -m repro.obs DIR`")
+    p.add_argument("--monitor", action="store_true",
+                   help="live health plane on top of --trace: a collector "
+                        "in the parent receives every record over a side "
+                        "socket as it is emitted, online detectors "
+                        "(straggler, divergence, DP burn, byte drift, "
+                        "RTT, chain decay) append to alerts.jsonl, and "
+                        "a crashed process's last records are recovered "
+                        "from the collector's flight ring. Watch live "
+                        "with `python -m repro.obs.live DIR` "
+                        "(docs/observability.md); still bitwise-invisible")
+    p.add_argument("--straggler-s", type=float, default=None,
+                   metavar="SEC",
+                   help="tcp only: scripted fault — delay the LAST "
+                        "party's uploads by SEC seconds every round (the "
+                        "straggler the health plane's EWMA detector "
+                        "flags; composes with --dropout-at, which "
+                        "crashes party 0)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--resume", action="store_true",
@@ -170,6 +187,22 @@ def parse_args(argv=None):
     if args.dropout_at is not None and args.transport != "tcp":
         p.error("--dropout-at injects a process crash; it requires "
                 "--transport tcp")
+    if args.straggler_s is not None:
+        if args.transport != "tcp":
+            p.error("--straggler-s stalls a real party process's uploads; "
+                    "it requires --transport tcp")
+        if args.straggler_s <= 0:
+            p.error("--straggler-s must be a positive delay in seconds")
+        if args.parties < 2:
+            p.error("--straggler-s stalls the LAST party so the others "
+                    "define the reference pace; it requires --parties >= 2")
+    if args.monitor:
+        if not args.trace:
+            p.error("--monitor scores the live trace stream; it requires "
+                    "--trace DIR (alerts.jsonl / health.json land there)")
+        if args.mode != "vfl-zoo":
+            p.error("--monitor watches the federated health plane; it "
+                    "requires --mode vfl-zoo")
     if args.serve is not None:
         if args.mode != "vfl-zoo":
             p.error("--serve drives the federated serving round; it "
@@ -179,6 +212,9 @@ def parse_args(argv=None):
         if args.dropout_at is not None:
             p.error("--dropout-at scripts a TRAINING fault; the serving "
                     "path has no round schedule to crash at")
+        if args.straggler_s is not None:
+            p.error("--straggler-s scripts a TRAINING fault; the serving "
+                    "path has no round schedule to stall")
         if args.resume:
             p.error("--resume restores training state; serving reads "
                     "checkpoints directly via --ckpt-dir")
@@ -277,15 +313,22 @@ def run_tcp(args, cfg, log):
         # multiplier once and ships the resolved value to every process
         spec["vfl"]["dp"] = {"epsilon": args.dp_epsilon,
                              "delta": args.dp_delta, "clip": args.dp_clip}
-    plan = FailurePlan()
+    faults = {}
     if args.dropout_at is not None:
-        plan = FailurePlan({0: PartyFault(crash_at_round=args.dropout_at)})
+        faults[0] = PartyFault(crash_at_round=args.dropout_at)
+    if args.straggler_s is not None:
+        # the LAST party straggles — never party 0, so the stall composes
+        # with --dropout-at's party-0 crash in one run
+        faults[args.parties - 1] = PartyFault(slow_send_s=args.straggler_s)
+    plan = FailurePlan(faults)
     # the federation deadline scales with the requested work — the
     # default 300 s hard wall would kill any long run; 2 s per round
     # comfortably covers socket round-trips + per-process jit compiles
+    # (plus the scripted stall, every round, on the straggling party)
+    per_round = 2.0 + (args.straggler_s or 0.0)
     cfg_rt = RuntimeConfig(
-        deadline_s=max(300.0, 120.0 + 2.0 * args.steps * args.parties),
-        trace_dir=args.trace)
+        deadline_s=max(300.0, 120.0 + per_round * args.steps * args.parties),
+        trace_dir=args.trace, monitor=args.monitor)
     res = run_federation(spec, rounds=args.steps, plan=plan, cfg=cfg_rt,
                          ckpt_root=args.ckpt_dir, resume=args.resume)
     h = history_losses(res)
@@ -294,6 +337,8 @@ def run_tcp(args, cfg, log):
     final_h = float(h[-1]) if len(h) else float("nan")
     extra = ({"dp_epsilon": args.dp_epsilon}
              if args.dp_epsilon is not None else {})
+    if "monitor" in res:
+        extra["alerts"] = len(res["monitor"]["alerts"])
     log.log(args.steps, transport="tcp", updates=srv["updates"],
             h=final_h, rejoins=res["rejoins"], **extra,
             disconnects=srv["disconnects"],
@@ -334,14 +379,16 @@ def run_serve(args, cfg, log):
         from repro.runtime.serving import run_tcp_serving
         cfg_rt = RuntimeConfig(
             deadline_s=max(300.0, 120.0 + 0.1 * sc.requests),
-            trace_dir=args.trace)
+            trace_dir=args.trace, monitor=args.monitor)
         res = run_tcp_serving(spec, sample_ids, cfg=cfg_rt, slots=sc.slots,
                               cache_entries=sc.cache_entries,
                               ckpt_root=args.ckpt_dir)
         met = res["metrics"]
+        extra = ({"alerts": len(res["monitor"]["alerts"])}
+                 if "monitor" in res else {})
         log.log(sc.requests, transport="tcp", served=met["served"],
                 steps=met["steps"], cache_hits=met["cache_hits"],
-                bytes_per_prediction=met["bytes_per_prediction"])
+                bytes_per_prediction=met["bytes_per_prediction"], **extra)
         return float(met["served"])
 
     from repro.core.wire import NetworkChannel
@@ -372,12 +419,33 @@ def run_serve(args, cfg, log):
 def main(argv=None):
     args = parse_args(argv)
     cfg = get_config(args.arch, reduced=args.reduced)
+    monitor = None
     if args.trace:
+        from repro import obs
+        if args.monitor and args.transport != "tcp":
+            # in-process modes have no harness to own the collector: the
+            # launcher is collector AND sole producer, so the monitor must
+            # exist (and its address be exported) BEFORE obs.configure
+            # dials the stream. On tcp the harness/serving parent owns it.
+            from repro.obs.health import HealthEngine
+            from repro.obs.monitor import MonitorServer
+            monitor = MonitorServer(args.trace, engine=HealthEngine())
+            os.environ[obs.MONITOR_ENV] = monitor.addr
         # the launcher process's own tracer (metric records + any
         # in-process executor spans); spawned tcp children configure
         # themselves from RuntimeConfig.trace_dir via the harness env var
-        from repro import obs
         obs.configure(args.trace, role="launch")
+    try:
+        return _dispatch(args, cfg)
+    finally:
+        if monitor is not None:
+            from repro import obs
+            os.environ.pop(obs.MONITOR_ENV, None)
+            obs.configure(None)     # goodbye frame, then stop the collector
+            monitor.stop()
+
+
+def _dispatch(args, cfg):
     if args.serve is not None:
         return run_serve(args, cfg,
                          ObsMetricLogger(f"serve:{args.arch}:vfl-zoo"))

@@ -19,18 +19,28 @@ exports ``REPRO_TRACE_DIR`` before spawning, and the child's first
 ``maybe_tracer()`` call opens its own trace file with a role derived
 from the multiprocessing process name. Merge the per-process files with
 ``python -m repro.obs <dir>``.
+
+Live plane: when ``REPRO_MONITOR_ADDR`` is exported (the harness does
+this under ``RuntimeConfig.monitor``), every tracer additionally mirrors
+its records to the parent's ``obs.monitor.MonitorServer`` collector and
+the online detectors in ``obs.health`` score them as they arrive; watch
+with ``python -m repro.obs.live <dir>``. Configuring a tracer also arms
+the flight recorder: a SIGTERM dumps the ring of recent records to
+``flight-<role>-<pid>.jsonl`` before the process dies.
 """
 from __future__ import annotations
 
 import atexit
 import contextlib
 import os
+import signal
 import threading
 from typing import Optional
 
-from repro.obs.tracer import Tracer
+from repro.obs.tracer import MONITOR_ENV, Tracer
 
-__all__ = ["Tracer", "configure", "maybe_tracer", "trace", "ENV_VAR"]
+__all__ = ["Tracer", "configure", "maybe_tracer", "trace", "ENV_VAR",
+           "MONITOR_ENV"]
 
 ENV_VAR = "REPRO_TRACE_DIR"
 
@@ -38,6 +48,7 @@ _LOCK = threading.Lock()
 _UNSET = object()            # "not yet resolved from the environment"
 _tracer = _UNSET
 _NULL_SPAN = contextlib.nullcontext()   # shared: nullcontext is stateless
+_term_hook_installed = False
 
 
 def configure(out_dir: Optional[str], role: Optional[str] = None):
@@ -49,7 +60,10 @@ def configure(out_dir: Optional[str], role: Optional[str] = None):
         if _tracer is not _UNSET and _tracer is not None:
             _tracer.close()
         _tracer = Tracer(out_dir, role=role) if out_dir else None
-        return _tracer
+        t = _tracer
+    if t is not None:
+        _install_term_dump()
+    return t
 
 
 def maybe_tracer() -> Optional[Tracer]:
@@ -65,7 +79,43 @@ def maybe_tracer() -> Optional[Tracer]:
         if _tracer is _UNSET:
             out_dir = os.environ.get(ENV_VAR)
             _tracer = Tracer(out_dir) if out_dir else None
-        return _tracer
+        t = _tracer
+    if t is not None:
+        _install_term_dump()
+    return t
+
+
+def _install_term_dump() -> None:
+    """SIGTERM -> dump the flight ring, close the tracer, then die with
+    the default signal semantics (the handler re-raises after restoring
+    SIG_DFL, so the exit status still says 'killed by SIGTERM' and the
+    harness's terminate/join/kill escalation is unchanged). ``os._exit``
+    bypasses signals and atexit both — that path is covered by the
+    monitor-side ring in ``obs.monitor``. No-op off the main thread
+    (signal.signal would raise) and installed at most once."""
+    global _term_hook_installed
+    if _term_hook_installed:
+        return
+    if threading.current_thread() is not threading.main_thread():
+        return
+    try:
+        prev = signal.getsignal(signal.SIGTERM)
+
+        def _dump_and_die(signum, frame):
+            t = _tracer
+            if t is not _UNSET and t is not None:
+                try:
+                    t.dump_flight(f"signal:{signum}")
+                    t.close()
+                except Exception:
+                    pass                      # we are dying; best effort
+            signal.signal(signum, prev if callable(prev) else signal.SIG_DFL)
+            os.kill(os.getpid(), signum)
+
+        signal.signal(signal.SIGTERM, _dump_and_die)
+        _term_hook_installed = True
+    except (ValueError, OSError):
+        pass                                  # exotic embedding: skip
 
 
 def trace(name: str, **attrs):

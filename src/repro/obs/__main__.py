@@ -24,7 +24,7 @@ def main(argv=None) -> int:
                    help="also write merged Chrome trace-event JSON here")
     args = p.parse_args(argv)
 
-    records = collect.load_dir(args.trace_dir)
+    records, stats = collect.load_dir_stats(args.trace_dir)
     if not records:
         print(f"no trace records under {args.trace_dir}", file=sys.stderr)
         return 1
@@ -33,7 +33,7 @@ def main(argv=None) -> int:
             json.dump(collect.chrome_trace(records), f)
         print(f"# wrote {args.out} "
               f"({len(records)} records) — open in Perfetto")
-    sys.stdout.write(collect.summary(records))
+    sys.stdout.write(collect.summary(records, stats=stats))
     return 0
 
 

@@ -29,11 +29,16 @@ META_PH = "M"
 # load + merge
 # ---------------------------------------------------------------------------
 
-def load_file(path: str) -> List[dict]:
-    """One process's records, each annotated with role/pid/unix. Lines
-    that fail to parse (a process killed mid-write) are skipped."""
-    records: List[dict] = []
+def _read_file(path: str):
+    """Parse one JSONL trace/flight file WITHOUT annotation. Returns
+    ``(meta, entries, dropped)`` where entries are ``(key, rec)`` pairs —
+    key is the record's canonical serialization, used to deduplicate a
+    flight ring against what the process already flushed — and dropped
+    counts undecodable lines (a process killed mid-write leaves a torn
+    trailing line; it must cost ONE record, not the whole merge)."""
+    entries = []
     meta: Optional[dict] = None
+    dropped = 0
     with open(path) as f:
         for line in f:
             line = line.strip()
@@ -42,30 +47,91 @@ def load_file(path: str) -> List[dict]:
             try:
                 rec = json.loads(line)
             except json.JSONDecodeError:
+                dropped += 1
                 continue
-            if rec.get("ev") == "meta":
-                meta = rec
+            ev = rec.get("ev")
+            if ev == "meta":
+                if meta is None:
+                    meta = rec
                 continue
-            records.append(rec)
-    if meta is None:
-        return []                      # headerless file: unalignable
+            if ev == "flight":
+                continue               # dump provenance marker, not data
+            entries.append((json.dumps(rec, sort_keys=True), rec))
+    return meta, entries, dropped
+
+
+def _annotate(meta: dict, records: List[dict]) -> None:
     off = meta["t0_unix"] - meta["t0_mono"]
     for rec in records:
         rec["role"] = meta["role"]
         rec["pid"] = meta["pid"]
         if "ts" in rec:
             rec["unix"] = rec["ts"] + off
+
+
+def load_file(path: str) -> List[dict]:
+    """One process's records, each annotated with role/pid/unix. Torn
+    lines are skipped (use ``load_dir_stats`` to count them)."""
+    meta, entries, _ = _read_file(path)
+    if meta is None:
+        return []                      # headerless file: unalignable
+    records = [rec for _, rec in entries]
+    _annotate(meta, records)
     return records
+
+
+def load_dir_stats(trace_dir: str):
+    """All records from every ``trace-*.jsonl`` AND ``flight-*.jsonl``
+    under ``trace_dir``, merged onto the shared wall-clock axis and
+    sorted by it, plus merge stats. Flight-recorder dumps (a crashed
+    process's ring — written by its SIGTERM hook or by the monitor on a
+    dirty disconnect) are deduplicated per (role, pid) against whatever
+    that process managed to flush itself, so a record is counted once no
+    matter how many sinks captured it. Returns ``(records, stats)`` with
+    stats keys: files, flight_files, records, flight_recovered,
+    dropped_lines."""
+    records: List[dict] = []
+    seen = defaultdict(set)            # (role, pid) -> canonical keys
+    stats = {"files": 0, "flight_files": 0, "records": 0,
+             "flight_recovered": 0, "dropped_lines": 0}
+    for path in sorted(glob.glob(os.path.join(trace_dir, "trace-*.jsonl"))):
+        meta, entries, dropped = _read_file(path)
+        stats["files"] += 1
+        stats["dropped_lines"] += dropped
+        if meta is None:
+            continue
+        ident = (meta.get("role"), meta.get("pid"))
+        recs = []
+        for key, rec in entries:
+            seen[ident].add(key)
+            recs.append(rec)
+        _annotate(meta, recs)
+        records.extend(recs)
+    for path in sorted(glob.glob(os.path.join(trace_dir, "flight-*.jsonl"))):
+        meta, entries, dropped = _read_file(path)
+        stats["flight_files"] += 1
+        stats["dropped_lines"] += dropped
+        if meta is None:
+            continue
+        ident = (meta.get("role"), meta.get("pid"))
+        fresh = []
+        for key, rec in entries:
+            if key in seen[ident]:
+                continue
+            seen[ident].add(key)
+            fresh.append(rec)
+        stats["flight_recovered"] += len(fresh)
+        _annotate(meta, fresh)
+        records.extend(fresh)
+    records.sort(key=lambda r: r.get("unix", 0.0))
+    stats["records"] = len(records)
+    return records, stats
 
 
 def load_dir(trace_dir: str) -> List[dict]:
-    """All records from every ``trace-*.jsonl`` under ``trace_dir``,
+    """All records from every trace (+ flight) file under ``trace_dir``,
     merged onto the shared wall-clock axis and sorted by it."""
-    records: List[dict] = []
-    for path in sorted(glob.glob(os.path.join(trace_dir, "trace-*.jsonl"))):
-        records.extend(load_file(path))
-    records.sort(key=lambda r: r.get("unix", 0.0))
-    return records
+    return load_dir_stats(trace_dir)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -138,9 +204,11 @@ def _pct(values: List[float], q: float) -> float:
     return xs[idx]
 
 
-def summary(records: List[dict]) -> str:
+def summary(records: List[dict], stats: Optional[dict] = None) -> str:
     """Human-readable digest: p50/p99 per span kind, staleness histogram,
-    heartbeat RTT per party, bytes-by-kind timeline, counters, epsilon."""
+    heartbeat RTT per party, bytes-by-kind timeline, counters, epsilon.
+    Pass ``load_dir_stats``' stats to surface merge hygiene (torn lines
+    dropped, flight-recorder records recovered)."""
     spans = defaultdict(list)
     histos = defaultdict(list)
     counters = defaultdict(float)
@@ -222,6 +290,13 @@ def summary(records: List[dict]) -> str:
     comp, total, frac = chain_completeness(records)
     lines.append(f"\n== round chains ==\ncomplete party->wire->server "
                  f"chains: {comp}/{total} ({frac:.1%})")
+
+    if stats is not None:
+        lines.append(
+            f"\n== merge hygiene ==\nfiles={stats['files']} "
+            f"flight_files={stats['flight_files']} "
+            f"flight_recovered={stats['flight_recovered']} "
+            f"dropped_lines={stats['dropped_lines']}")
     return "\n".join(lines) + "\n"
 
 

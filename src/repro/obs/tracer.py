@@ -29,14 +29,35 @@ Identities, not baggage: joins across processes ride the protocol's own
 instrumented seams already know — no trace context is ever attached to a
 Message (``ReplayChannel`` asserts meta equality; smuggling span ids
 through ``meta`` would break replay and transcript parity).
+
+Live plane (PR 10): when ``REPRO_MONITOR_ADDR`` names a collector (the
+harness/serving parent's ``obs.monitor.MonitorServer``), every record is
+ALSO mirrored over a dedicated side TCP socket the moment it is emitted
+— a second out-of-band sink, never a protocol ``Message``. The stream
+degrades silently: a dead or slow collector drops the mirror and the
+run proceeds bit-identically. Each tracer additionally keeps a bounded
+ring of its most recent serialized records (the flight recorder);
+``dump_flight(reason)`` writes it as ``flight-<role>-<pid>.jsonl``,
+which ``collect.py`` merges (deduplicated against the trace file) so a
+killed process's final rounds still reach the Perfetto view. On clean
+``close()`` the stream carries one ``{"ev": "shutdown"}`` frame — the
+collector uses its absence to tell a crash from a goodbye; the frame
+never touches the trace file itself.
 """
 from __future__ import annotations
 
 import json
 import os
+import socket
 import threading
 import time
+from collections import deque
 from typing import Optional
+
+MONITOR_ENV = "REPRO_MONITOR_ADDR"
+# sendall budget per record mirror: a collector slower than this is
+# dropped rather than allowed to stall the traced process
+_STREAM_TIMEOUT_S = 0.5
 
 
 def _jsonable(v):
@@ -82,8 +103,9 @@ class Tracer:
     (enforced by zvlint's obs-discipline rule)."""
 
     def __init__(self, out_dir: str, role: Optional[str] = None,
-                 flush_every: int = 256):
+                 flush_every: int = 256, ring_size: int = 512):
         os.makedirs(out_dir, exist_ok=True)
+        self.out_dir = out_dir
         self.role = _sanitize(role or _default_role())
         self.pid = os.getpid()
         self.path = os.path.join(out_dir,
@@ -92,7 +114,8 @@ class Tracer:
         # reentrant: dp_round emits a gauge (which takes the lock again)
         # while holding it around the accountant update
         self._lock = threading.RLock()
-        self._buf: list[dict] = []
+        self._buf: list[str] = []            # serialized lines, no newline
+        self._ring: deque = deque(maxlen=int(ring_size))   # flight recorder
         self._file = open(self.path, "a")
         self._closed = False
         # the merge anchor: ONE wall-clock read per process; every other
@@ -102,17 +125,39 @@ class Tracer:
         self._pings: dict = {}        # peer -> FIFO of ping send times
         self._dp: dict = {}           # party -> [accountant, releases]
         self._dp_curve = None         # one release's RDP curve (cached)
-        self._emit({"ev": "meta", "role": self.role, "pid": self.pid,
-                    "t0_unix": self.t0_unix, "t0_mono": self.t0_mono})
+        # live mirror: connect BEFORE the meta record so the collector's
+        # first frame is always the clock anchor
+        self._stream = _connect_monitor(os.environ.get(MONITOR_ENV))
+        self._meta_line = json.dumps(
+            {"ev": "meta", "role": self.role, "pid": self.pid,
+             "t0_unix": self.t0_unix, "t0_mono": self.t0_mono})
+        self._emit_line(self._meta_line, ring=False)
 
     # -- record sinks -------------------------------------------------------
     def _emit(self, rec: dict) -> None:
+        self._emit_line(json.dumps(rec, default=_jsonable), ring=True)
+
+    def _emit_line(self, line: str, ring: bool) -> None:
         with self._lock:
             if self._closed:
                 return
-            self._buf.append(rec)
+            self._buf.append(line)
+            if ring:
+                self._ring.append(line)
+            if self._stream is not None:
+                try:
+                    self._stream.sendall(line.encode() + b"\n")
+                except OSError:
+                    self._drop_stream_locked()
             if len(self._buf) >= self.flush_every:
                 self._flush_locked()
+
+    def _drop_stream_locked(self) -> None:
+        try:
+            self._stream.close()
+        except OSError:
+            pass
+        self._stream = None
 
     def span(self, name: str, **attrs) -> _Span:
         return _Span(self, name, attrs)
@@ -216,11 +261,34 @@ class Tracer:
                 rec[k] = str(v)
         self._emit(rec)
 
+    # -- flight recorder ----------------------------------------------------
+    def dump_flight(self, reason: str) -> Optional[str]:
+        """Write the bounded ring of recent records to
+        ``flight-<role>-<pid>.jsonl`` (meta header first, then the ring,
+        then one ``{"ev": "flight"}`` marker). Called from the SIGTERM
+        hook installed by ``obs.configure``; safe to call any time — it
+        never mutates the ring or the main trace file. Returns the path,
+        or None if the dump itself failed (we are crashing; best effort)."""
+        with self._lock:
+            lines = list(self._ring)
+            meta = self._meta_line
+        marker = json.dumps({"ev": "flight", "reason": str(reason),
+                             "ts": time.monotonic()})
+        path = os.path.join(self.out_dir,
+                            f"flight-{self.role}-{self.pid}.jsonl")
+        try:
+            with open(path, "w") as f:
+                f.write(meta + "\n")
+                f.write("".join(ln + "\n" for ln in lines))
+                f.write(marker + "\n")
+        except OSError:
+            return None
+        return path
+
     # -- lifecycle ----------------------------------------------------------
     def _flush_locked(self) -> None:
         if self._buf:
-            self._file.write("".join(
-                json.dumps(r, default=_jsonable) + "\n" for r in self._buf))
+            self._file.write("".join(ln + "\n" for ln in self._buf))
             self._file.flush()
             self._buf = []
 
@@ -236,6 +304,37 @@ class Tracer:
             self._flush_locked()
             self._closed = True
             self._file.close()
+            if self._stream is not None:
+                # the goodbye frame: stream-only, never in the trace file
+                try:
+                    self._stream.sendall(json.dumps(
+                        {"ev": "shutdown", "role": self.role,
+                         "pid": self.pid}).encode() + b"\n")
+                except OSError:
+                    pass
+                self._drop_stream_locked()
+
+
+def _connect_monitor(addr: Optional[str]):
+    """Dial the collector named by ``REPRO_MONITOR_ADDR`` (host:port).
+    Any failure returns None — a monitored run must never fail or block
+    because the monitor is gone."""
+    if not addr:
+        return None
+    try:
+        host, port = addr.rsplit(":", 1)
+        sock = socket.create_connection((host, int(port)), timeout=2.0)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            # a deep send buffer pairs with the collector's receive
+            # buffer: a slow collector costs kernel memory, not stalls
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 1 << 21)
+        except OSError:
+            pass
+        sock.settimeout(_STREAM_TIMEOUT_S)
+        return sock
+    except (OSError, ValueError):
+        return None
 
 
 def _default_role() -> str:

@@ -30,6 +30,12 @@ import numpy as np
 from repro.configs.base import RuntimeConfig
 from repro.core.async_host import HostAsyncTrainer
 from repro.dp.accountant import resolve_spec_dp
+# the harness is the monitor's parent-side entry point: it owns the env
+# handoff to spawned children, so obs-discipline approves these two deep
+# imports here (analysis/rules_obs.py) and nowhere else in runtime/
+from repro.obs import MONITOR_ENV
+from repro.obs.health import engine_from_spec
+from repro.obs.monitor import MonitorServer
 from repro.runtime.failures import NO_FAILURES, FailurePlan
 from repro.runtime.party import party_main
 from repro.runtime.problem import build_problem
@@ -80,6 +86,19 @@ def run_federation(spec: dict, rounds: int, *,
     prev_trace = os.environ.get("REPRO_TRACE_DIR")
     if cfg.trace_dir:
         os.environ["REPRO_TRACE_DIR"] = cfg.trace_dir
+    # live health plane: start the collector BEFORE spawning so every
+    # child's tracer finds REPRO_MONITOR_ADDR at construction and mirrors
+    # its records over the side socket (out-of-band: never a protocol
+    # Message, pinned bitwise-invisible in tests)
+    monitor = None
+    prev_monitor = os.environ.get(MONITOR_ENV)
+    if cfg.monitor:
+        if not cfg.trace_dir:
+            raise ValueError("RuntimeConfig.monitor requires trace_dir "
+                             "(the collector writes alerts/health there)")
+        monitor = MonitorServer(cfg.trace_dir,
+                                engine=engine_from_spec(spec, rounds))
+        os.environ[MONITOR_ENV] = monitor.addr
     ctx = mp.get_context("spawn")
     port_q = ctx.Queue()
     result_q = ctx.Queue()
@@ -183,6 +202,8 @@ def run_federation(spec: dict, rounds: int, *,
         results["rejoins"] = rejoins
         for p in list(procs.values()) + [server_proc]:
             p.join(timeout=10.0)
+        if monitor is not None:
+            results["monitor"] = monitor.stop()
         return results
     finally:
         if cfg.trace_dir:
@@ -190,7 +211,14 @@ def run_federation(spec: dict, rounds: int, *,
                 os.environ.pop("REPRO_TRACE_DIR", None)
             else:
                 os.environ["REPRO_TRACE_DIR"] = prev_trace
+        if monitor is not None:
+            if prev_monitor is None:
+                os.environ.pop(MONITOR_ENV, None)
+            else:
+                os.environ[MONITOR_ENV] = prev_monitor
         _terminate(list(procs.values()) + [server_proc])
+        if monitor is not None:
+            monitor.stop()                 # idempotent: error paths too
 
 
 def run_reference(spec: dict, rounds: int, channel=None):

@@ -139,7 +139,13 @@ def party_main(spec: dict, m: int, port: int, rounds: int,
                 if cfg.compute_cost_s > 0:
                     time.sleep(cfg.compute_cost_s)
                 if fault is not None and fault.slow_send_s > 0:
-                    time.sleep(fault.slow_send_s)      # straggler link
+                    # straggler link: span the injected stall so a merged
+                    # trace shows WHERE the slow party's round went (the
+                    # live straggler detector needs only party_round, but
+                    # an operator reading the Perfetto view needs this)
+                    with trace("party_stall", party=int(m),
+                               round=int(rnd)):
+                        time.sleep(fault.slow_send_s)
                 msg_c, msg_hats = async_host.party_round_messages(
                     channel, m, rnd, idx, prep)
                 fsock.send_message(msg_c)

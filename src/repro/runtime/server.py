@@ -198,6 +198,11 @@ class RuntimeServer:
 
     def _on_disconnect(self, m: int) -> None:
         self._disconnects += 1
+        tr = maybe_tracer()
+        if tr is not None:
+            # a live monitor (and the merged trace) sees WHO dropped —
+            # joined against the flight recorder's last rounds by party
+            tr.counter("party_disconnect", party=int(m))
         self._snapshot(f"party {m} disconnected")
 
     # -- connection handling -----------------------------------------------

@@ -35,7 +35,13 @@ import numpy as np
 from repro.configs.base import RuntimeConfig
 from repro.core.exchange import ZOExchange
 from repro.core.wire import InMemoryChannel, Message
-from repro.obs import maybe_tracer, trace
+from repro.obs import MONITOR_ENV, maybe_tracer, trace
+# serving.py is the serving parent's monitor entry point (same exception
+# the training harness carries in analysis/rules_obs.py). Serving c_up
+# payloads legitimately vary with slot occupancy, so its engine runs
+# with the byte-drift detector off.
+from repro.obs.health import HealthEngine
+from repro.obs.monitor import MonitorServer
 from repro.runtime.harness import _ensure_child_pythonpath, _terminate
 from repro.runtime.problem import build_problem
 from repro.runtime.server import FederationError, make_channel
@@ -244,6 +250,15 @@ def run_tcp_serving(spec: dict, sample_ids, *,
     prev_trace = os.environ.get("REPRO_TRACE_DIR")
     if cfg.trace_dir:
         os.environ["REPRO_TRACE_DIR"] = cfg.trace_dir
+    monitor = None
+    prev_monitor = os.environ.get(MONITOR_ENV)
+    if cfg.monitor:
+        if not cfg.trace_dir:
+            raise ValueError("RuntimeConfig.monitor requires trace_dir "
+                             "(the collector writes alerts/health there)")
+        monitor = MonitorServer(cfg.trace_dir,
+                                engine=HealthEngine(byte_drift=False))
+        os.environ[MONITOR_ENV] = monitor.addr
     ctx = mp.get_context("spawn")
     result_q = ctx.Queue()
 
@@ -293,19 +308,29 @@ def run_tcp_serving(spec: dict, sample_ids, *,
         for p in procs:
             p.join(timeout=10.0)
         by_rid = sorted(completed, key=lambda r: r.rid)
-        return {
+        out = {
             "predictions": [(r.sample_id, r.prediction) for r in by_rid],
             "metrics": engine.metrics(),
             "analytic": analytic,
             "parties": parties,
         }
+        if monitor is not None:
+            out["monitor"] = monitor.stop()
+        return out
     finally:
         if cfg.trace_dir:
             if prev_trace is None:
                 os.environ.pop("REPRO_TRACE_DIR", None)
             else:
                 os.environ["REPRO_TRACE_DIR"] = prev_trace
+        if monitor is not None:
+            if prev_monitor is None:
+                os.environ.pop(MONITOR_ENV, None)
+            else:
+                os.environ[MONITOR_ENV] = prev_monitor
         server_sock.close()
         if engine is not None:
             engine.close()
         _terminate(procs)
+        if monitor is not None:
+            monitor.stop()                 # idempotent: error paths too

@@ -294,6 +294,10 @@ class FederatedServingEngine:
                      len(occupied) / max(crossings, 1), step=rnd)
             tr.gauge("serve_cache_hits_total",
                      sum(c.hits for c in self.caches), step=rnd)
+            # backlog: requests still waiting for a slot after this
+            # step's admission — the live health plane's saturation
+            # signal (persistently > 0 means slots are the bottleneck)
+            tr.gauge("serve_queue_depth", len(self.queue), step=rnd)
 
     def _step_round(self, occupied) -> int:
         rnd = self.steps

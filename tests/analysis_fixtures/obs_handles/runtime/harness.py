@@ -1,0 +1,17 @@
+# obs-discipline fixture (CLEAN): the monitor-parent exception. A file
+# named harness.py (or serving.py) under a runtime/ segment is the
+# parent-side entry point that spawns the federation's children and owns
+# the env handoff, so it alone may deep-import the collector and the
+# health engine — and construct the MonitorServer the children stream to.
+import os
+
+from repro.obs import MONITOR_ENV
+from repro.obs.health import engine_from_spec
+from repro.obs.monitor import MonitorServer
+
+
+def run(spec, rounds, cfg):
+    monitor = MonitorServer(cfg.trace_dir,
+                            engine=engine_from_spec(spec, rounds))
+    os.environ[MONITOR_ENV] = monitor.addr
+    return monitor

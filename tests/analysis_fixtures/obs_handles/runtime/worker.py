@@ -1,0 +1,12 @@
+# obs-discipline fixture (FLAGGED): a runtime CHILD reaching for the
+# collector. Only the parent entry points (harness.py / serving.py) may
+# own a MonitorServer — a party or server process that starts one would
+# observe the federation from inside it, killing the out-of-band
+# guarantee. Both the deep imports and the construction are violations
+# here because this file is not one of the two approved names.
+from repro.obs.health import HealthEngine      # deep import, not parent
+from repro.obs.monitor import MonitorServer    # deep import, not parent
+
+
+def party_main(trace_dir):
+    return MonitorServer(trace_dir, engine=HealthEngine())

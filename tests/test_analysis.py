@@ -90,6 +90,22 @@ def test_obs_flags_every_escape_hatch_and_clean_twin_passes():
     assert _for(rep, "clean.py") == []
 
 
+def test_obs_monitor_parent_exception_is_exactly_two_files():
+    """The live health plane's collector may be owned only by the
+    runtime parent entry points (harness.py / serving.py): they spawn
+    the children and export REPRO_MONITOR_ADDR. The same deep imports
+    and MonitorServer construction in any other scoped file stay
+    violations — a child that starts a collector would observe the
+    federation from inside it."""
+    rep = analyze([FIX / "obs_handles"], select=["obs-discipline"])
+    assert _for(rep, "harness.py") == []       # parent shape: approved
+    bad = _for(rep, "worker.py")
+    msgs = " | ".join(f.message for f in bad)
+    assert "deep import" in msgs               # monitor/health internals
+    assert "MonitorServer() construction" in msgs
+    assert len(bad) == 3                       # 2 imports + 1 construction
+
+
 def test_obs_wallclock_module_policy_forgives_clocks_not_entropy():
     """obs/ reads wall clocks by design (every trace record is
     timestamped), so rng-discipline exempts clock reads there without

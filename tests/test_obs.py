@@ -6,10 +6,16 @@ chains reconstruct from the merged record.
 The parity tests are the tentpole: a traced run must equal an untraced
 run bit-for-bit — losses, final parameters, per-kind wire bytes, and
 (over TCP) the measured socket bytes — because the tracer only ever
-reads clocks and writes its own files.
+reads clocks and writes its own files. PR 10 extends the same bar to
+the LIVE plane: a ``--monitor`` run (records mirrored over a side
+socket to the collector, online detectors armed) must hold the exact
+same equalities, ride zero protocol Messages, recover a crashed
+party's final rounds from the collector-side flight ring, and alert on
+an injected straggler while staying silent on a clean run.
 """
 import io
 import json
+import os
 import re
 
 import numpy as np
@@ -19,7 +25,7 @@ from repro import obs
 from repro.configs.base import RuntimeConfig
 from repro.core.wire import RecordingChannel
 from repro.obs.collect import (chain_completeness, chrome_trace, load_dir,
-                               summary)
+                               load_dir_stats, summary)
 from repro.obs.tracer import Tracer
 from repro.runtime import (FailurePlan, PartyFault, history_losses,
                            run_federation, run_reference)
@@ -318,6 +324,148 @@ def test_arrival_schedule_traces_staleness_and_parking(tmp_path):
     assert all(r["value"] > 0.0 for r in parked)
 
 
+# ----------------------------------- live plane: monitored == plain -------
+
+def _monitored_reference(spec, rounds, trace_dir, channel=None):
+    """Run the in-memory reference with the FULL live plane armed: a
+    parent-side collector, the tracer streaming every record to it over
+    the side socket, and the spec-tuned detectors scoring online."""
+    from repro.obs.health import engine_from_spec
+    from repro.obs.monitor import MonitorServer
+    monitor = MonitorServer(str(trace_dir),
+                            engine=engine_from_spec(spec, rounds))
+    os.environ[obs.MONITOR_ENV] = monitor.addr
+    try:
+        out = _traced_reference(spec, rounds, trace_dir, channel=channel)
+    finally:
+        os.environ.pop(obs.MONITOR_ENV, None)
+    return out, monitor.stop()
+
+
+def test_monitored_memory_run_bit_identical_and_alert_free(tmp_path):
+    """ISSUE acceptance (memory transport, hardest path: DP noise + the
+    fused kernels): arming the monitor changes not one bit — losses,
+    final params, per-kind wire bytes, message counts — and the online
+    detectors (including the DP burn detector against the real
+    accountant curve) raise ZERO alerts on a clean run."""
+    spec, rounds = _spec(mu=5e-2, fused=True,
+                         dp={"epsilon": 4.0, "delta": DELTA,
+                             "clip": 1.0}), 6
+    rec0, rec1 = RecordingChannel(), RecordingChannel()
+    tr0, res0 = run_reference(spec, rounds, channel=rec0)
+    (tr1, res1), summ = _monitored_reference(spec, rounds, tmp_path,
+                                             channel=rec1)
+    assert [h for _, h in res0.history] == [h for _, h in res1.history]
+    assert dict(rec0.bytes_by_kind) == dict(rec1.bytes_by_kind)
+    assert dict(rec0.msgs_by_kind) == dict(rec1.msgs_by_kind)
+    for m in range(2):
+        np.testing.assert_array_equal(np.asarray(tr0.party_w[m]["w"]),
+                                      np.asarray(tr1.party_w[m]["w"]))
+    # the collector actually saw the run, scored it, and stayed silent
+    assert summ["records"] > 0
+    assert summ["alerts"] == []
+    assert summ["flight_files"] == []      # clean close: goodbye frames
+    assert (tmp_path / "health.json").exists()
+    assert (tmp_path / "alerts.jsonl").read_text() == ""
+
+
+@runtime
+@slow
+def test_monitored_tcp_run_bit_identical_and_out_of_band(tmp_path):
+    """ISSUE acceptance (tcp): a ``monitor=True`` federation equals the
+    unmonitored one on losses, params, per-kind wire bytes, message
+    counts AND measured socket bytes — the telemetry stream rides zero
+    protocol Messages and zero protocol-socket bytes, with DP noise and
+    the fused kernels on."""
+    spec, rounds = _spec(mu=5e-2, fused=True,
+                         dp={"epsilon": 4.0, "delta": DELTA,
+                             "clip": 1.0}), 4
+    res_u = run_federation(spec, rounds, cfg=_cfg())
+    res_m = run_federation(spec, rounds,
+                           cfg=_cfg(trace_dir=str(tmp_path), monitor=True))
+    np.testing.assert_array_equal(history_losses(res_u),
+                                  history_losses(res_m))
+    srv_u, srv_m = res_u["server"], res_m["server"]
+    assert srv_u["bytes_by_kind"] == srv_m["bytes_by_kind"]
+    assert srv_u["msgs_by_kind"] == srv_m["msgs_by_kind"]
+    assert srv_u["socket_bytes_in"] == srv_m["socket_bytes_in"]
+    assert srv_u["socket_bytes_out"] == srv_m["socket_bytes_out"]
+    for m in range(2):
+        np.testing.assert_array_equal(res_u["parties"][m]["final_w"]["w"],
+                                      res_m["parties"][m]["final_w"]["w"])
+    mon = res_m["monitor"]
+    assert mon["records"] > 0 and mon["alerts"] == []
+    assert (tmp_path / "health.json").exists()
+
+
+@runtime
+@slow
+def test_straggler_alert_within_bound_and_clean_run_silent(tmp_path):
+    """Satellite e2e: a PartyFault(slow_send_s=0.3) on party 1 raises a
+    straggler alert naming that party within 6 rounds; the identical
+    federation without the fault — same spec, same seeds — raises ZERO
+    alerts."""
+    spec, rounds = _spec(), 8
+    res = run_federation(
+        spec, rounds, plan=FailurePlan({1: PartyFault(slow_send_s=0.3)}),
+        cfg=_cfg(trace_dir=str(tmp_path / "slow"), monitor=True))
+    alerts = res["monitor"]["alerts"]
+    stragglers = [a for a in alerts if a["detector"] == "straggler"]
+    assert stragglers, f"no straggler alert in {alerts}"
+    first = stragglers[0]
+    assert first["party"] == 1
+    assert first["round"] <= 6
+    # every line in the on-disk log carries the same identity
+    logged = [json.loads(ln) for ln in
+              (tmp_path / "slow" / "alerts.jsonl").read_text().splitlines()]
+    assert any(a["detector"] == "straggler" and a["party"] == 1
+               for a in logged)
+
+    clean = run_federation(
+        spec, rounds, cfg=_cfg(trace_dir=str(tmp_path / "clean"),
+                               monitor=True))
+    assert clean["monitor"]["alerts"] == []
+    assert (tmp_path / "clean" / "alerts.jsonl").read_text() == ""
+
+
+@runtime
+@slow
+def test_flight_recorder_survives_os_exit_crash(tmp_path):
+    """ISSUE acceptance: party 0 dies by ``os._exit`` (no atexit, no
+    signal handler, nothing flushed) mid-federation. The monitor-side
+    ring must recover its final pre-crash rounds into the merged trace
+    and the Perfetto export — the crashed pid's party_round spans are
+    all there."""
+    spec, rounds, crash_at = _spec(), 6, 3
+    res = run_federation(
+        spec, rounds,
+        plan=FailurePlan({0: PartyFault(crash_at_round=crash_at)}),
+        cfg=_cfg(trace_dir=str(tmp_path), monitor=True),
+        ckpt_root=str(tmp_path / "ckpt"))
+    assert res["rejoins"] == 1
+    flights = res["monitor"]["flight_files"]
+    assert len(flights) == 1
+    fname = os.path.basename(flights[0])
+    assert fname.startswith("flight-fed-party0-")
+    crashed_pid = int(fname.split("-")[3].split(".")[0])
+
+    records, stats = load_dir_stats(str(tmp_path))
+    assert stats["flight_files"] == 1
+    assert stats["flight_recovered"] > 0, \
+        "every flight record was already on disk — recorder proved nothing"
+    pre_crash = {r["round"] for r in records
+                 if r.get("pid") == crashed_pid and r["ev"] == "span"
+                 and r["name"] == "party_round"}
+    assert pre_crash == set(range(crash_at)), \
+        f"killed party's final rounds missing: {sorted(pre_crash)}"
+    # and they survive into the Chrome/Perfetto export
+    doc = chrome_trace(records)
+    ev_rounds = {ev["args"].get("round") for ev in doc["traceEvents"]
+                 if ev.get("ph") == "X" and ev["pid"] == crashed_pid
+                 and ev["name"] == "party_round"}
+    assert ev_rounds == set(range(crash_at))
+
+
 # ------------------------------------------------------- bench smoke ------
 
 @slow
@@ -332,3 +480,11 @@ def test_overhead_bench_smoke():
     assert "overhead_pct" in rows[names.index("fused_round_traced")][2]
     parity = rows[names.index("traced_equals_untraced")]
     assert "equal=1" in parity[2]
+    # the full live plane rides the same run shape: collector armed,
+    # records collected, a healthy toy run raises zero alerts
+    monitored = rows[names.index("monitored_overhead")][2]
+    assert "overhead_pct" in monitored
+    assert "healthy=1" in monitored
+    # the fault-injection rows need real processes: tcp runs only
+    assert "alert_latency" not in names
+    assert "flight_recorder_coverage" not in names
